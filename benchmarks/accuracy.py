@@ -1,0 +1,114 @@
+"""Paper Fig. 11: accuracy of SparF vs SparQ vs H2O vs local attention
+across KV compression ratios.
+
+No external datasets ship offline, so the metric is attention-output
+fidelity + next-token agreement against the dense oracle on a small
+randomly-initialized model over structured synthetic sequences — the
+ordering (SparF ~= SparQ >> H2O > local) is the paper's claim under test.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig, SparFConfig
+from repro.core import baselines
+from repro.core.offload import decode_attention
+from repro.core.paged_kv import init_layer_cache, make_layout, write_prefill
+from repro.models.model_zoo import build, forward, init_params, make_inputs
+from repro.sharding.policy import NULL
+
+RATIOS = (0.5, 0.25, 0.125, 0.0625)
+
+
+def _attention_fidelity(report, seed=0):
+    """Attention-output cosine similarity per method/ratio on one layer."""
+    B, S, KV, G, hd = 4, 256, 4, 2, 64
+    H = KV * G
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    # structured K/V: a few heavy directions + noise (gives attention peaks)
+    heavy = jax.random.normal(ks[0], (B, 8, KV, hd))
+    idx = jax.random.randint(ks[1], (B, S), 0, 8)
+    k = (jnp.take_along_axis(heavy, idx[:, :, None, None].repeat(KV, 2)
+                             .repeat(hd, 3), axis=1)
+         + 0.5 * jax.random.normal(ks[2], (B, S, KV, hd)))
+    v = jax.random.normal(ks[3], (B, S, KV, hd))
+    q = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, H, hd))
+    length = S
+    dense = baselines.dense_decode(q, k, v, length)
+    acc = jnp.cumsum(jnp.ones((B, KV, S)), -1) * 0.0  # placeholder h2o accum
+    # h2o accumulated scores ~ true attention mass (oracle-style)
+    qg = q.reshape(B, KV, G, hd)
+    w = jax.nn.softmax(jnp.einsum("bkgh,bskh->bkgs", qg, k)
+                       / np.sqrt(hd), -1)
+    acc = jnp.sum(w, axis=2)
+
+    def cos(a, b):
+        num = jnp.sum(a * b)
+        return float(num / (jnp.linalg.norm(a) * jnp.linalg.norm(b)))
+
+    for ratio in RATIOS:
+        keep = max(4, int(S * ratio))
+        r = max(2, int(hd * ratio * 2))
+        cfg = build("minitron-8b", smoke=True).replace(
+            n_heads=H, n_kv_heads=KV, d_model=H * hd,
+            sparf=SparFConfig(rank_r=r, top_k=keep, page_tokens=16))
+        layout = make_layout(cfg, S, 1)
+        cache = write_prefill(layout, init_layer_cache(layout, B,
+                                                       jnp.float32),
+                              k, v, lengths=length)
+        outs = {
+            "sparf": decode_attention(cfg, NULL, layout, q, cache, length,
+                                      impl="insti_sparf"),
+            "sparq": baselines.sparq_decode(q, k, v, length, r=r, keep=keep,
+                                            v_mean=jnp.mean(v, 1)),
+            "h2o": baselines.h2o_decode(q, k, v, length, keep, acc),
+            "local": baselines.local_decode(q, k, v, length, keep),
+        }
+        for name, out in outs.items():
+            report(f"accuracy/fidelity/{name}/ratio_{ratio}", 0,
+                   f"cos={cos(out, dense):.4f}")
+
+
+def _next_token_agreement(report, seed=0):
+    """End-to-end: next-token top-1 agreement with dense decoding on a
+    small model."""
+    cfg0 = build("minitron-8b", smoke=True).replace(
+        max_seq=160, dtype="float32")
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg0, key)
+    B, S = 4, 128
+    batch = make_inputs(cfg0, ShapeConfig("t", S, B, "prefill"), key)
+    layout = make_layout(cfg0, cfg0.max_seq, 1)
+
+    def run(impl, scfg, feed):
+        """Teacher-forced decode: both systems consume the same (dense)
+        token stream; agreement measures per-step argmax decisions without
+        compounding divergence."""
+        cfg = cfg0.replace(attention_impl=impl, sparf=scfg)
+        _, _, cache = forward(cfg, NULL, params, batch, "prefill",
+                              layout=layout, length=S)
+        preds = []
+        for t in range(16):
+            tok = feed[:, t:t + 1]
+            logits, _, cache = forward(cfg, NULL, params, {"token": tok},
+                                       "decode", cache=cache, layout=layout)
+            preds.append(np.asarray(
+                jnp.argmax(logits[:, -1], -1).astype(jnp.int32)))
+        return np.stack(preds, 1)
+
+    feed = np.asarray(jax.random.randint(jax.random.PRNGKey(7), (B, 17), 0,
+                                         cfg0.vocab_size, jnp.int32))
+    base = run("insti_dense", cfg0.sparf, feed)
+    for ratio in (0.25, 0.125):
+        scfg = SparFConfig.for_ratio(S, ratio, cfg0.head_dim, page_tokens=8)
+        got = run("insti_sparf", scfg, feed)
+        agree = float((got == base).mean())
+        report(f"accuracy/agreement/sparf/ratio_{ratio}", 0,
+               f"top1_agree={agree:.3f}")
+
+
+def run(report):
+    _attention_fidelity(report)
+    _next_token_agreement(report)

@@ -1,0 +1,169 @@
+"""Analytic hardware model calibrated to the paper's testbed (§V-§VI).
+
+The paper's end-to-end throughput numbers are functions of link/medium
+bandwidths (PCIe, SSD, CSD flash channels) that do not exist in this
+container, so each paper figure is reproduced from this calibrated model —
+the same roofline-style accounting the paper itself uses (Fig. 6) — while
+the TPU build reports HLO-derived rooflines (benchmarks/roofline.py).
+
+Calibration targets (paper §VI): InstI-SparF/FlexGen <= 11.1x,
+InstI-Dense/FlexGen ~ 6.85x @bs64, SparF/Dense ~ 2.08x @bs256,
+InstI bs256 ~ DeepSpeed best +4.6%, DeepSpeed cliff at bs32,
+FlexGen OOM at bs128, 20-CSD scaling 8.99x/7.29x.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+# --- paper testbed constants -------------------------------------------------
+GPU_TFLOPS = 38.7e12          # A6000 fp16 (paper Fig. 6 roofline)
+GPU_VRAM_BW = 768e9
+GPU_VRAM = 48e9
+HOST_PCIE_BW = 11e9           # effective host<->GPU (pinned copies, no overlap)
+HOST_DRAM_EFF = 45e9          # DRAM usable for KV (weights copy + OS resident)
+SSD_EXT_BW = 5.5e9            # 980pro sequential read
+SSD_FS_OVERHEAD = 0.30        # FS + bounce buffer + double copy (FlexGen path)
+SSD_SWAP_EFF = 0.35           # kernel swapping efficiency (DeepSpeed cliff)
+CSD_INT_BW = 11.2e9           # aggregated flash-channel bw (paper VI-C)
+CSD_FLOPS = 0.44e12           # Zynq7045 DSPs @285MHz
+P2P_BW = 12e9                 # GPU<->CSD P2P (Gen3 x4 + protocol)
+SPARSE_READ_EFF = 0.55        # random page reads vs sequential (dual-step)
+HOST_STEP_OVERHEAD = 8e-3     # host-FS/software per decode step (FlexGen/DS)
+CSD_STEP_OVERHEAD = 1e-3      # NVMe command + P2P doorbell per step
+
+
+@dataclass(frozen=True)
+class LM:
+    n_layers: int = 40
+    d: int = 5120
+    n_heads: int = 40
+    params: float = 13e9
+    seq_in: int = 1024
+    seq_out: int = 1024
+
+
+@dataclass(frozen=True)
+class System:
+    name: str
+    kv_medium: str            # vram | host | ssd | csd
+    attn_on: str              # gpu | csd
+    sparsity: float = 1.0     # KV compression ratio (1 = dense)
+    n_drives: int = 1
+    p2p: bool = False
+
+
+def kv_bytes_per_step(lm: LM, batch: int, ctx: int) -> float:
+    return 2 * 2 * batch * ctx * lm.d * lm.n_layers     # K+V fp16
+
+
+def sparse_bytes_factor(sparsity: float, head_dim: int = 128) -> float:
+    """SparF/SparQ bytes actually touched per step, as a fraction of the
+    dense K+V traffic: step 1 reads r/hd of the K cache (embedding-indexed
+    copy); step 2 reads ratio x (K+V) with ~1.5x page over-fetch
+    (dual-step keeps ~half sparsity in step 1, paper IV-C)."""
+    if sparsity >= 1.0:
+        return 1.0
+    r_frac = min(2 * sparsity, 1.0)            # r ~ 2*ratio*hd (SparQ)
+    return 0.5 * r_frac + 1.5 * sparsity
+
+
+def weight_bytes(lm: LM) -> float:
+    return 2 * lm.params
+
+
+def linear_flops(lm: LM, batch: int) -> float:
+    return 2 * lm.params * batch
+
+
+def attn_flops(lm: LM, batch: int, ctx: int) -> float:
+    return 4 * batch * ctx * lm.d * lm.n_layers
+
+
+def kv_path_bw(sys: System, kv_resident: float) -> float:
+    if sys.kv_medium == "vram":
+        return GPU_VRAM_BW
+    if sys.kv_medium == "host":
+        if kv_resident > HOST_DRAM_EFF:        # DeepSpeed swap cliff
+            return SSD_EXT_BW * SSD_FS_OVERHEAD * SSD_SWAP_EFF
+        return HOST_PCIE_BW
+    if sys.kv_medium == "ssd":
+        # FlexGen: SSD -> host FS -> GPU; extra drives don't help (paper 13)
+        return SSD_EXT_BW * SSD_FS_OVERHEAD
+    if sys.kv_medium == "csd":
+        return CSD_INT_BW * effective_drives(sys)
+    raise ValueError(sys.kv_medium)
+
+
+def effective_drives(sys: System) -> float:
+    """Multi-CSD parallel efficiency. The paper measures sub-linear scaling
+    (8.99x dense / 7.29x sparse at 20 CSDs, Fig. 17a) from host-fabric
+    P2P serialization and head-level load imbalance; we calibrate a single
+    efficiency exponent to those two points rather than model the PCIe
+    switch fabric."""
+    exp = 0.73 if sys.sparsity >= 1.0 else 0.66
+    return sys.n_drives ** exp
+
+
+def decode_step_time(sys: System, lm: LM, batch: int, ctx: int) -> dict:
+    """{total_s, weight_s, kv_s, compute_s, xfer_s, host_s}."""
+    w_t = weight_bytes(lm) / GPU_VRAM_BW
+    lin_t = linear_flops(lm, batch) / GPU_TFLOPS
+    kv_dense = kv_bytes_per_step(lm, batch, ctx)
+    kv = kv_dense * sparse_bytes_factor(sys.sparsity)
+    bw = kv_path_bw(sys, kv_dense)
+    eff_bw = bw
+    if sys.sparsity < 1.0 and sys.kv_medium == "csd":
+        eff_bw = bw * SPARSE_READ_EFF          # random flash page reads
+    # the engine falls back to dense streaming if sparsity wouldn't help
+    kv_t = min(kv / eff_bw, kv_dense / bw)
+    if sys.attn_on == "csd":
+        a_t = (attn_flops(lm, batch, ctx) * min(sys.sparsity * 2, 1.0)
+               / (CSD_FLOPS * effective_drives(sys)))
+        x_t = 4 * batch * lm.d * lm.n_layers * 2 / P2P_BW
+        host_t = CSD_STEP_OVERHEAD
+        gpu_t = w_t + lin_t
+        total = max(gpu_t, max(kv_t, a_t) + x_t) + host_t
+    else:
+        a_t = attn_flops(lm, batch, ctx) * sys.sparsity / GPU_TFLOPS
+        x_t = 0.0
+        host_t = 0.0 if sys.kv_medium == "vram" else HOST_STEP_OVERHEAD
+        total = w_t + lin_t + kv_t + a_t + host_t
+    return {"total_s": total, "weight_s": w_t, "kv_s": kv_t,
+            "compute_s": lin_t + a_t, "xfer_s": x_t, "host_s": host_t}
+
+
+def vram_ok(sys: System, lm: LM, batch: int, ctx: int) -> bool:
+    """InstI's layer-wise prefill pipeline needs only one layer of KV in
+    VRAM; host/SSD offloaders buffer a large prefill working set (FlexGen
+    OOMs at bs=128, paper VI-C)."""
+    act = 2 * batch * lm.seq_in * lm.d * 4
+    if sys.attn_on == "csd":
+        kv_in_vram = kv_bytes_per_step(lm, batch, lm.seq_in) / lm.n_layers
+    else:
+        kv_in_vram = kv_bytes_per_step(lm, batch, lm.seq_in) * 0.25
+    return weight_bytes(lm) + act + kv_in_vram < GPU_VRAM
+
+
+def throughput(sys: System, lm: LM, batch: int) -> float:
+    if not vram_ok(sys, lm, batch, lm.seq_in):
+        return 0.0
+    total = 0.0
+    steps = 8
+    for i in range(steps):
+        ctx = lm.seq_in + (i + 1) * lm.seq_out // steps
+        total += decode_step_time(sys, lm, batch, ctx)["total_s"]
+    return batch / (total / steps)
+
+
+SYSTEMS = {
+    "DeepSpeed": System("DeepSpeed", "host", "gpu"),
+    "FlexGen": System("FlexGen", "ssd", "gpu"),
+    "FlexGen-SparQ": System("FlexGen-SparQ", "ssd", "gpu", sparsity=1 / 8),
+    "InstI-Dense": System("InstI-Dense", "csd", "csd", p2p=True),
+    "InstI-SparF": System("InstI-SparF", "csd", "csd", sparsity=1 / 8,
+                          p2p=True),
+}
+
+
+def with_drives(sys: System, n: int) -> System:
+    return replace(sys, n_drives=n)

@@ -1,0 +1,59 @@
+"""Kernel micro-harness: wall-time per call for each Pallas kernel
+(interpret mode on CPU — structural harness; real numbers come from TPU)
+and the pure-jnp reference for comparison."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, n=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(report):
+    key = jax.random.PRNGKey(0)
+    B, H, S, hd = 1, 2, 256, 64
+    q = jax.random.normal(key, (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(key, (B, H, S, hd), jnp.float32)
+    v = jax.random.normal(key, (B, H, S, hd), jnp.float32)
+    report("kernel/flash_attention_interp",
+           _time(lambda *a: ops.flash_attention(*a), q, k, v),
+           "vs_ref_us=%.0f" % _time(
+               lambda *a: jax.jit(ref.flash_attention)(*a), q, k, v))
+
+    KV, G, P, page = 2, 2, 16, 16
+    kp = jax.random.normal(key, (B, KV, P, page, hd), jnp.float32)
+    vp = jax.random.normal(key, (B, KV, P, page, hd), jnp.float32)
+    qd = jax.random.normal(key, (B, KV, G, hd), jnp.float32)
+    bt = jnp.broadcast_to(jnp.arange(P), (B, KV, P)).astype(jnp.int32)
+    report("kernel/paged_attention_interp",
+           _time(lambda *a: ops.paged_attention(*a), qd, kp, vp, bt, 200),
+           "vs_ref_us=%.0f" % _time(
+               lambda *a: jax.jit(ref.paged_attention)(*a), qd, kp, vp, bt,
+               200))
+
+    ke = kp.reshape(B, KV, P * page, hd).swapaxes(-1, -2)
+    vs = jnp.sum(vp.reshape(B, KV, P * page, hd), 2)
+    report("kernel/sparf_attention_interp",
+           _time(lambda *a: ops.sparf_attention(*a, rank_r=16, top_k=32),
+                 qd, kp, vp, ke, bt, vs, 200), "two-kernel pipeline")
+
+    T, D, N = 256, 32, 16
+    ab = jax.random.uniform(key, (B, T, D, N), minval=0.5, maxval=0.99)
+    bx = jax.random.normal(key, (B, T, D, N)) * 0.1
+    ct = jax.random.normal(key, (B, T, N))
+    report("kernel/mamba_scan_interp",
+           _time(lambda *a: ops.mamba_scan(*a), ab, bx, ct),
+           "vs_ref_us=%.0f" % _time(
+               lambda *a: jax.jit(lambda x, y, z: ref.mamba_scan(x, y, z)[0]
+                                  )(*a), ab, bx, ct))

@@ -1,0 +1,31 @@
+"""Paper Fig. 14/15: decode-phase latency breakdown (KV access share) for
+FlexGen / InstI / InstI-2, dense and 1/8-sparse, at bs in {4, 64, 256}."""
+from __future__ import annotations
+
+from benchmarks.hwmodel import LM, SYSTEMS, decode_step_time, with_drives
+
+
+def run(report):
+    lm = LM()
+    ctx = lm.seq_in + lm.seq_out // 2
+    cases = {
+        "FlexGen": SYSTEMS["FlexGen"],
+        "InstI": SYSTEMS["InstI-Dense"],
+        "InstI-2": with_drives(SYSTEMS["InstI-Dense"], 2),
+        "FlexGen-SparQ": SYSTEMS["FlexGen-SparQ"],
+        "InstI-SparF": SYSTEMS["InstI-SparF"],
+        "InstI-SparF-2": with_drives(SYSTEMS["InstI-SparF"], 2),
+    }
+    for bs in (4, 64, 256):
+        for name, sys in cases.items():
+            t = decode_step_time(sys, lm, bs, ctx)
+            kv_share = t["kv_s"] / (t["kv_s"] + t["weight_s"]
+                                    + t["compute_s"] + t["xfer_s"])
+            report(f"latency/{name}/bs{bs}", t["total_s"] * 1e6,
+                   f"kv_share={kv_share * 100:.1f}%")
+    # paper: FlexGen bs=64 dense kv share 98.9% -> InstI 80.7%
+    t_fg = decode_step_time(cases["FlexGen"], lm, 64, ctx)
+    t_ii = decode_step_time(cases["InstI"], lm, 64, ctx)
+    red = 1 - (t_ii["kv_s"] / t_fg["kv_s"])
+    report("latency/kv_access_reduction_dense_bs64", 0,
+           f"{red * 100:.1f}% (paper: 88.1-94.0%)")

@@ -1,0 +1,20 @@
+"""Paper Fig. 6 / §III-B reproduction: roofline-based operator placement.
+The derived column must match the paper's split: only decode-phase
+attention (Logit+Attend) is offloaded to the CSD."""
+from __future__ import annotations
+
+from repro.core.engine import paper_plan
+
+
+def run(report):
+    expected = {("QKV/O-Proj+FFN", "prefill"): "compute",
+                ("Attention", "prefill"): "compute",
+                ("QKV/O-Proj+FFN", "decode"): "compute",
+                ("Logit+Attend", "decode"): "storage"}
+    for row in paper_plan(batch=64):
+        key = (row["op"], row["phase"])
+        ok = expected[key] == row["placement"]
+        report(f"placement/{row['phase']}/{row['op']}",
+               row[f"t_{row['placement']}_side_s"] * 1e6,
+               f"AI={row['intensity']:.1f} -> {row['placement']} "
+               f"({'matches paper' if ok else 'MISMATCH'})")

@@ -1,0 +1,176 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline).
+
+Per (arch x shape x mesh) JSON record (written by launch/dryrun.py):
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
+
+(cost_analysis on the SPMD-partitioned module is per-device, as are the
+shard shapes in the optimized HLO, so no further division by chip count.)
+
+Also reports MODEL_FLOPS = 6ND (train) / 2·N_active·B (decode) per device,
+the useful-compute ratio, the dominant term, and a roofline fraction =
+useful_time_of_dominant_resource / achieved_time_of_dominant_resource.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16
+HBM_BW = 819e9
+LINK_BW = 50e9               # ICI per link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(mesh: str = "16x16", variants: bool = False) -> List[dict]:
+    recs = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return recs
+    for f in sorted(os.listdir(DRYRUN_DIR)):
+        if not f.endswith(".json"):
+            continue
+        if not variants and "_opt" in f:
+            continue                    # §Perf iteration variants
+        with open(os.path.join(DRYRUN_DIR, f)) as fh:
+            r = json.load(fh)
+        r["file"] = f
+        if r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def _tokens_per_step(shape: str, rec: dict) -> float:
+    from repro.configs.base import SHAPES
+    s = SHAPES[shape]
+    if s.mode == "decode":
+        return s.global_batch                   # one token per row
+    return s.global_batch * s.seq_len
+
+
+def terms(rec: dict) -> dict:
+    """Three-term roofline per device.
+
+    Raw terms come from the probe-extrapolated HLO costs (scan bodies are
+    otherwise counted once; see launch/dryrun.py). Two documented artifacts
+    of the CPU host backend make the raw memory term an UPPER BOUND:
+      (a) bf16 dot operands are converted to f32 (no native bf16 matmul on
+          CPU) — counted in convert_bytes_total; native on TPU,
+      (b) XLA gather/scatter cost counts the FULL operand, so the sparse
+          page gathers (which on TPU are page-granular DMAs — exactly what
+          kernels/sparf_decode.py issues) are charged as dense reads.
+    The ADJUSTED memory term therefore uses the analytic minimum HBM
+    traffic (weights + touched KV/state + activation spill) — the number a
+    TPU DMA engine executing our Pallas kernels would move.
+
+    roofline_fraction = ideal_time / adjusted_step_time, where
+      ideal = max(MODEL_FLOPS/peak, min_bytes/HBM)  (the workload's wall)
+      adjusted step = max(measured_flops/peak, min_bytes/HBM, coll/link).
+    It penalizes excess compute (remat, MoE capacity padding) and
+    collectives; raw_fraction additionally charges the raw memory term.
+    """
+    flops = max(rec.get("flops_total", rec["flops"]), 0.0)
+    byts = max(rec.get("bytes_total", rec["bytes_accessed"]), 0.0)
+    coll = max(rec.get("collective_bytes_total",
+                       rec["collective_bytes"].get("total", 0)), 0)
+    t_comp = flops / PEAK_FLOPS
+    t_mem_raw = byts / HBM_BW
+    min_bytes = _min_bytes_per_device(rec)
+    t_mem_adj = min_bytes / HBM_BW
+    t_coll = coll / LINK_BW
+    n_dev = rec["n_devices"]
+    tokens = _tokens_per_step(rec["shape"], rec)
+    model_flops_dev = rec["model_flops_per_token"] / 3 * (
+        3 if rec["shape"].startswith("train") else 1)  # 6ND train, 2ND fwd
+    model_flops_dev = model_flops_dev * tokens / n_dev
+    useful_ratio = model_flops_dev / max(flops, 1e-9)
+    ideal = max(model_flops_dev / PEAK_FLOPS, t_mem_adj)
+    step_adj = max(t_comp, t_mem_adj, t_coll)
+    step_raw = max(t_comp, t_mem_raw, t_coll)
+    dominant = max((("compute", t_comp), ("memory", t_mem_adj),
+                    ("collective", t_coll)), key=lambda kv: kv[1])
+    return {"t_compute_s": t_comp, "t_memory_s": t_mem_raw,
+            "t_memory_adj_s": t_mem_adj,
+            "t_collective_s": t_coll, "dominant": dominant[0],
+            "step_est_s": step_adj,
+            "model_flops_per_device": model_flops_dev,
+            "useful_flop_ratio": min(useful_ratio, 10.0),
+            "roofline_fraction": min(ideal / max(step_adj, 1e-12), 1.0),
+            "raw_fraction": min(ideal / max(step_raw, 1e-12), 1.0)}
+
+
+def _min_bytes_per_device(rec: dict) -> float:
+    """Minimum HBM traffic per device per step.
+
+    Parameters shard over `model` (16) except grid-EP expert weights
+    (data x model = n_dev); weights are re-read every microbatch; train
+    touches them 3x (fwd, bwd, optimizer r/w amortized)."""
+    from repro.configs.base import SHAPES, get_arch
+    cfg = get_arch(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_dev = rec["n_devices"]
+    tp = 16
+    n_moe = sum(1 for i in range(cfg.n_layers) if cfg.is_moe_layer(i))
+    expert_b = n_moe * cfg.n_experts * 3 * cfg.d_model * cfg.d_ff * 2
+    dense_b = rec["param_count"] * 2 - expert_b
+    grid = expert_b / tp > 8 << 30
+    p_dev = dense_b / tp + expert_b / (n_dev if grid else tp)
+    act_dev = (shape.global_batch * shape.seq_len * cfg.d_model * 2
+               / max(n_dev // tp, 1))
+    if shape.mode == "train":
+        n_mb = max(cfg.num_microbatches, 1)
+        return p_dev * 3 * n_mb + 4 * act_dev * cfg.n_layers / 8
+    if shape.mode == "prefill":
+        return p_dev + 2 * act_dev * cfg.n_layers / 8
+    # decode: params (active experts only) + touched KV/state
+    active_frac = rec["active_param_count"] / max(rec["param_count"], 1)
+    kv_heads = max(cfg.n_kv_heads, 1)
+    kv_bytes = (2 * cfg.n_layers * shape.global_batch * shape.seq_len
+                * kv_heads * (cfg.head_dim or 0) * 2)
+    if cfg.attention_impl == "insti_sparf" and cfg.n_kv_heads:
+        ratio = min(1.0, cfg.sparf.top_k / shape.seq_len
+                    + cfg.sparf.rank_r / max(cfg.head_dim, 1))
+        kv_bytes *= ratio
+    # at decode every hot expert's weights are touched once per step
+    p_dec = dense_b / tp + expert_b / (n_dev if grid else tp)
+    return p_dec + kv_bytes / n_dev
+
+
+def fmt_row(rec: dict) -> str:
+    t = terms(rec)
+    return ("| {arch} | {shape} | {impl} | {tc:.2e} | {tm:.2e} | {ta:.2e} "
+            "| {tl:.2e} | {dom} | {ur:.2f} | {rf:.1%} | {rr:.1%} |").format(
+        arch=rec["arch"], shape=rec["shape"], impl=rec["impl"],
+        tc=t["t_compute_s"], tm=t["t_memory_s"], ta=t["t_memory_adj_s"],
+        tl=t["t_collective_s"], dom=t["dominant"],
+        ur=t["useful_flop_ratio"], rf=t["roofline_fraction"],
+        rr=t["raw_fraction"])
+
+
+HEADER = ("| arch | shape | impl | compute s | memory s (raw) "
+          "| memory s (adj) | collective s | bottleneck "
+          "| useful-FLOP ratio | roofline frac (adj) | raw frac |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def run(report):
+    recs = load_records()
+    for rec in recs:
+        t = terms(rec)
+        report(f"roofline/{rec['arch']}/{rec['shape']}",
+               t["step_est_s"] * 1e6,
+               f"{t['dominant']}-bound frac={t['roofline_fraction']:.2f}")
+
+
+def main():
+    recs = load_records()
+    print(HEADER)
+    for rec in recs:
+        print(fmt_row(rec))
+
+
+if __name__ == "__main__":
+    main()

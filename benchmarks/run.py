@@ -1,0 +1,47 @@
+"""Benchmark driver — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names")
+    args = ap.parse_args()
+
+    from benchmarks import (accuracy, kernel_bench, latency_breakdown,
+                            placement, roofline, scaling, sensitivity,
+                            throughput, write_amp)
+    modules = {
+        "placement": placement,          # Fig. 6 / §III-B operator split
+        "write_amp": write_amp,          # §IV-C granularity analysis
+        "throughput": throughput,        # Fig. 12/13
+        "latency_breakdown": latency_breakdown,   # Fig. 14/15
+        "scaling": scaling,              # Fig. 17a
+        "sensitivity": sensitivity,      # Fig. 17b
+        "accuracy": accuracy,            # Fig. 11
+        "kernel_bench": kernel_bench,
+        "roofline": roofline,            # §Roofline (from dry-run JSONs)
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+
+    def report(name: str, us: float, derived: str = ""):
+        print(f"{name},{us:.2f},{derived}")
+        sys.stdout.flush()
+
+    for name, mod in modules.items():
+        if only and name not in only:
+            continue
+        try:
+            mod.run(report)
+        except Exception as e:  # keep the harness going, surface the error
+            report(f"{name}/ERROR", 0, repr(e))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Fig. 17a: throughput scaling with the number of CSDs (1..20) at
+bs=256, dense and 1/8-sparse — head-level parallelism across the array."""
+from __future__ import annotations
+
+from benchmarks.hwmodel import LM, SYSTEMS, throughput, with_drives
+
+
+def run(report):
+    lm = LM()
+    base_d = throughput(with_drives(SYSTEMS["InstI-Dense"], 1), lm, 256)
+    base_s = throughput(with_drives(SYSTEMS["InstI-SparF"], 1), lm, 256)
+    for n in (1, 2, 4, 8, 12, 16, 20):
+        d = throughput(with_drives(SYSTEMS["InstI-Dense"], n), lm, 256)
+        s = throughput(with_drives(SYSTEMS["InstI-SparF"], n), lm, 256)
+        report(f"scaling/dense/{n}csd", 1e6 / d, f"{d / base_d:.2f}x")
+        report(f"scaling/sparf/{n}csd", 1e6 / s, f"{s / base_s:.2f}x")
+    d20 = throughput(with_drives(SYSTEMS["InstI-Dense"], 20), lm, 256)
+    s20 = throughput(with_drives(SYSTEMS["InstI-SparF"], 20), lm, 256)
+    report("scaling/dense_20csd_speedup", 0,
+           f"{d20 / base_d:.2f}x (paper: 8.99x)")
+    report("scaling/sparf_20csd_speedup", 0,
+           f"{s20 / base_s:.2f}x (paper: 7.29x)")

@@ -1,0 +1,17 @@
+"""Paper Fig. 17b: throughput vs KV compression ratio (1 and 2 CSDs)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.hwmodel import LM, SYSTEMS, throughput, with_drives
+
+
+def run(report):
+    lm = LM()
+    for nd in (1, 2):
+        for ratio in (1.0, 0.5, 0.25, 0.125, 0.0625):
+            sys = dataclasses.replace(
+                with_drives(SYSTEMS["InstI-SparF"], nd), sparsity=ratio)
+            t = throughput(sys, lm, 256)
+            report(f"sensitivity/{nd}csd/ratio_{ratio}", 1e6 / t,
+                   f"{t:.2f} tok/s")

@@ -1,0 +1,49 @@
+"""Paper Fig. 12/13: end-to-end decode throughput vs batch size, 1 and 2
+SSDs/CSDs, for all five systems — from the calibrated hardware model.
+Derived column checks the paper's headline ratios."""
+from __future__ import annotations
+
+from benchmarks.hwmodel import LM, SYSTEMS, throughput, with_drives
+
+BATCHES = (4, 8, 16, 32, 64, 128, 256)
+
+
+def table(n_drives: int = 1):
+    lm = LM()
+    rows = {}
+    for name, sys in SYSTEMS.items():
+        sys = with_drives(sys, n_drives)
+        rows[name] = [throughput(sys, lm, b) for b in BATCHES]
+    return rows
+
+
+def run(report):
+    for nd in (1, 2):
+        rows = table(nd)
+        for name, tps in rows.items():
+            for b, t in zip(BATCHES, tps):
+                report(f"throughput/{nd}ssd/{name}/bs{b}",
+                       1e6 / t if t else float("inf"),
+                       f"{t:.2f} tok/s")
+        # headline ratios (paper VI-C)
+        fg = rows["FlexGen"]
+        sp = rows["InstI-SparF"]
+        di = rows["InstI-Dense"]
+        ds = rows["DeepSpeed"]
+        fq = rows["FlexGen-SparQ"]
+        best = lambda xs: max([v for v in xs if v] or [1e-9])
+        if nd == 1:
+            report("ratio/InstI-SparF_bs256_vs_FlexGen_best", 0,
+                   f"{sp[-1] / best(fg):.1f}x (paper: 11.1x)")
+            report("ratio/InstI-Dense_vs_FlexGen_bs64", 0,
+                   f"{di[BATCHES.index(64)] / fg[BATCHES.index(64)]:.2f}x "
+                   f"(paper: 6.85x)")
+            report("ratio/SparF_vs_Dense_bs256", 0,
+                   f"{sp[-1] / di[-1]:.2f}x (paper: 2.08x)")
+            report("ratio/InstI_bs256_vs_DeepSpeed_best", 0,
+                   f"{(di[-1] / best(ds) - 1) * 100:+.1f}% (paper: +4.6%)")
+        else:
+            report("ratio/InstI_bs256_vs_FlexGen_best_2ssd", 0,
+                   f"{di[-1] / best(fg):.1f}x (paper: 10.5x)")
+            report("ratio/InstI-SparF_bs256_vs_FlexGen-SparQ_best_2ssd", 0,
+                   f"{sp[-1] / best(fq):.2f}x (paper: 3.11x)")

@@ -1,0 +1,44 @@
+"""Quickstart: build an assigned architecture at smoke scale, train a few
+steps on synthetic data, then serve it with SparF attention offloading.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig
+from repro.models.model_zoo import build, init_params, make_inputs
+from repro.runtime.data import DataConfig, batch_at
+from repro.runtime.optimizer import OptConfig
+from repro.runtime.train_state import init_train_state, make_train_step
+from repro.serving.session import Session
+from repro.sharding.policy import NULL
+
+
+def main():
+    cfg = build("glm4-9b", smoke=True).replace(max_seq=128)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    print(f"arch={cfg.name} params={sum(x.size for x in jax.tree.leaves(params)):,}")
+
+    # --- train a few steps ---
+    oc = OptConfig(lr=3e-3, warmup_steps=5, total_steps=50)
+    state = init_train_state(cfg, params, oc)
+    step = jax.jit(make_train_step(cfg, NULL, oc))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    for i in range(10):
+        state, metrics = step(state, batch_at(dc, i))
+        if i % 3 == 0:
+            print(f"step {i}: loss={float(metrics['loss']):.3f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f}")
+
+    # --- serve with the in-storage SparF path ---
+    sess = Session(cfg, state["params"], max_seq=128)
+    prompt = make_inputs(cfg, ShapeConfig("p", 32, 4, "prefill"), key)
+    out = sess.generate(prompt, 16)
+    print("generated token ids:\n", out)
+
+
+if __name__ == "__main__":
+    main()

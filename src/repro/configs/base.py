@@ -1,0 +1,221 @@
+"""Config system: ModelConfig, input-shape registry, arch registry.
+
+Every assigned architecture registers a full-size ModelConfig plus a
+reduced smoke-size variant (same family, tiny dims) used by CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclass(frozen=True)
+class SparFConfig:
+    """Paper Algorithm 1 hyper-parameters (core/sparf.py)."""
+    enabled: bool = True
+    rank_r: int = 16          # top-r |q| channels for approximate scores
+    top_k: int = 256          # tokens kept for the exact attention
+    page_tokens: int = 16     # m in Alg.1 — tokens per flash page (token-indexed)
+    channel_group: int = 8    # n in Alg.1 — channels per page (embedding-indexed)
+    # compression ratio = top_k / seq_len at runtime; r and k are derived from
+    # the ratio by SparFConfig.for_ratio when sweeping.
+
+    @staticmethod
+    def for_ratio(seq_len: int, ratio: float, head_dim: int,
+                  page_tokens: int = 16) -> "SparFConfig":
+        """Derive (r, k) from a KV compression ratio, as in the paper's 1/8
+        default: k = ratio * seq, r = ratio * head_dim (bandwidth-balanced)."""
+        k = max(page_tokens, _round_up(int(seq_len * ratio), page_tokens))
+        r = max(1, int(head_dim * ratio * 2))  # SparQ keeps r ~ d/4 at 1/8
+        return SparFConfig(rank_r=min(r, head_dim), top_k=min(k, seq_len),
+                           page_tokens=page_tokens)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1               # every k-th layer is MoE (hybrid/moe)
+    capacity_factor: float = 1.25
+    # --- SSM (mamba1) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    dt_rank: int = 0                 # 0 -> d_model // 16
+    # --- hybrid (jamba) ---
+    attn_period: int = 0             # one attention layer per `attn_period`
+    attn_offset: int = 0             # which index within the period is attention
+    # --- enc-dec ---
+    n_encoder_layers: int = 0
+    # --- frontend stub ---
+    frontend: str = "none"           # none | audio | vision
+    frontend_len: int = 0            # frames/patches produced by the stub
+    # --- positional / norm ---
+    rope: bool = True
+    rope_theta: float = 1e6
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    kv_dtype: str = ""               # "" -> dtype; "float8_e4m3fn" halves
+                                     # the decode memory term (beyond-paper)
+    ep_mode: str = "auto"            # auto | model | grid (expert layout)
+    combine_dtype: str = "float32"   # flash-combine psum precision
+    remat_policy: str = "full"       # full | dots (train compute/mem trade)
+    # --- runtime ---
+    max_seq: int = 1 << 19
+    remat: bool = True
+    scan_layers: bool = True
+    num_microbatches: int = 1        # gradient accumulation for train_step
+    sparf: SparFConfig = field(default_factory=SparFConfig)
+    attention_impl: str = "insti_sparf"   # dense|insti_dense|insti_sparf|flexgen_like|flexgen_sparq|h2o|local
+    source: str = ""                 # provenance tag from the assignment table
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+        if self.family == "ssm" or self.family == "hybrid":
+            if self.dt_rank == 0:
+                object.__setattr__(self, "dt_rank", max(1, self.d_model // 16))
+
+    # ---- derived ----
+    @property
+    def padded_vocab(self) -> int:
+        """Megatron-style vocab padding for 16-way TP divisibility."""
+        return _round_up(self.vocab_size, 16 * 8)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def kv_store_dtype(self):
+        return jnp.dtype(self.kv_dtype or self.dtype)
+
+    def is_attn_layer(self, i: int) -> bool:
+        if self.family == "ssm":
+            return False
+        if self.family == "hybrid" and self.attn_period:
+            return i % self.attn_period == self.attn_offset
+        return True
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.n_experts > 0 and (i % self.moe_every == self.moe_every - 1)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks), for roofline 6ND."""
+        d, f, v = self.d_model, self.d_ff, self.padded_vocab
+        hd, h, kv = self.head_dim, self.n_heads, self.n_kv_heads
+        attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+        mlp = 3 * d * f                      # swiglu
+        moe_mlp = self.n_experts * 3 * d * f + d * self.n_experts
+        mamba = (d * 2 * self.d_inner + self.d_inner * self.ssm_conv
+                 + self.d_inner * (self.dt_rank + 2 * self.ssm_state)
+                 + self.dt_rank * self.d_inner + self.d_inner * self.ssm_state
+                 + self.d_inner + self.d_inner * d)
+        total = v * d * (1 if self.tie_embeddings else 2)
+        n_dec = self.n_layers
+        for i in range(n_dec):
+            if self.family == "ssm" or (self.family == "hybrid" and not self.is_attn_layer(i)):
+                total += mamba
+            else:
+                total += attn
+            if self.family in ("ssm",):
+                continue                     # mamba1 blocks have no FFN
+            total += moe_mlp if self.is_moe_layer(i) else mlp
+            total += 2 * d                   # norms
+        for _ in range(self.n_encoder_layers):
+            total += attn + mlp + 2 * d
+        return total
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top-k experts only)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        full = self.param_count()
+        f, d = self.d_ff, self.d_model
+        n_moe = sum(1 for i in range(self.n_layers) if self.is_moe_layer(i))
+        inactive = n_moe * (self.n_experts - self.experts_per_token) * 3 * d * f
+        return full - inactive
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                        # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.mode == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# arch registry, populated by the per-arch modules via register()
+ARCHS: dict = {}
+SMOKE: dict = {}
+
+
+def register(cfg: ModelConfig, smoke: ModelConfig):
+    ARCHS[cfg.name] = cfg
+    SMOKE[cfg.name] = smoke
+    return cfg
+
+
+def get_arch(name: str, smoke: bool = False) -> ModelConfig:
+    _ensure_loaded()
+    table = SMOKE if smoke else ARCHS
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(table)}")
+    return table[name]
+
+
+def list_archs() -> Tuple[str, ...]:
+    _ensure_loaded()
+    return tuple(sorted(ARCHS))
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from repro.configs import (  # noqa: F401
+        whisper_base, qwen3_moe_30b_a3b, kimi_k2_1t_a32b, minitron_8b,
+        starcoder2_15b, glm4_9b, minitron_4b, falcon_mamba_7b,
+        llava_next_34b, jamba_1_5_large_398b, opt13b,
+    )

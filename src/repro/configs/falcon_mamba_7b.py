@@ -1,0 +1,20 @@
+"""falcon-mamba-7b [ssm] mamba1 arch, attention-free. [arXiv:2410.05355; unverified]
+
+SparF is inapplicable (no KV cache) — see DESIGN.md §Arch-applicability.
+The in-storage insight survives as shard-resident SSM state."""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0, d_ff=0,
+    vocab_size=65024, ssm_state=16, ssm_expand=2, ssm_conv=4,
+    rope=False, num_microbatches=4, attention_impl="dense",
+    source="arXiv:2410.05355; unverified",
+)
+
+SMOKE = FULL.replace(
+    name="falcon-mamba-7b-smoke", n_layers=2, d_model=64, vocab_size=512,
+    ssm_state=8, max_seq=128, num_microbatches=1, dt_rank=8,
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,17 @@
+"""glm4-9b [dense] RoPE, GQA kv=2 (exercises the seq-sharded KV fallback).
+[hf:THUDM/glm-4-9b; hf]"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="glm4-9b", family="dense",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=2, d_ff=13696,
+    vocab_size=151552, num_microbatches=4,
+    source="hf:THUDM/glm-4-9b; hf",
+)
+
+SMOKE = FULL.replace(
+    name="glm4-9b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=1, d_ff=128, vocab_size=512, max_seq=128, num_microbatches=1,
+)
+
+register(FULL, SMOKE)

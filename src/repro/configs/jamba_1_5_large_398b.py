@@ -1,0 +1,22 @@
+"""jamba-1.5-large-398b [hybrid] Mamba+attn 1:7 interleave, MoE 16e top-2.
+[arXiv:2403.19887; hf]"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=24576,
+    vocab_size=65536, n_experts=16, experts_per_token=2, moe_every=2,
+    ssm_state=16, ssm_expand=2, ssm_conv=4,
+    attn_period=8, attn_offset=3,   # one attention layer per 8, 1:7 ratio
+    num_microbatches=16,
+    source="arXiv:2403.19887; hf",
+)
+
+SMOKE = FULL.replace(
+    name="jamba-1.5-large-398b-smoke", n_layers=8, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=512, n_experts=4, experts_per_token=2,
+    ssm_state=8, attn_period=4, attn_offset=1, max_seq=128,
+    num_microbatches=1, dt_rank=8,
+)
+
+register(FULL, SMOKE)

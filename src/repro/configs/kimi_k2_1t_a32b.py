@@ -1,0 +1,19 @@
+"""kimi-k2-1t-a32b [moe] trillion-param MoE, 384 experts top-8.
+[arXiv:2501.kimi2; unverified] (paper-table)"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, d_ff=2048,
+    vocab_size=163840, n_experts=384, experts_per_token=8,
+    num_microbatches=16,
+    source="arXiv:2501.kimi2; unverified",
+)
+
+SMOKE = FULL.replace(
+    name="kimi-k2-1t-a32b-smoke", n_layers=2, d_model=64, n_heads=8,
+    n_kv_heads=2, d_ff=64, vocab_size=512, n_experts=8, experts_per_token=2,
+    max_seq=128, num_microbatches=1,
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,19 @@
+"""llava-next-34b [vlm] anyres tiling; backbone only, vision frontend stub.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="llava-next-34b", family="vlm",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8, d_ff=20480,
+    vocab_size=64000, frontend="vision", frontend_len=576,  # 24x24 patches
+    num_microbatches=8,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified",
+)
+
+SMOKE = FULL.replace(
+    name="llava-next-34b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=512, frontend_len=8, max_seq=128,
+    num_microbatches=1,
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,17 @@
+"""minitron-4b [dense] pruned nemotron; 24 heads (head_dim-sharding fallback).
+[arXiv:2407.14679; hf]"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="minitron-4b", family="dense",
+    n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8, d_ff=9216,
+    vocab_size=256000, num_microbatches=2,
+    source="arXiv:2407.14679; hf",
+)
+
+SMOKE = FULL.replace(
+    name="minitron-4b-smoke", n_layers=2, d_model=48, n_heads=3,
+    n_kv_heads=1, d_ff=96, vocab_size=512, max_seq=128, num_microbatches=1,
+)
+
+register(FULL, SMOKE)

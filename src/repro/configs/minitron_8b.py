@@ -1,0 +1,16 @@
+"""minitron-8b [dense] pruned nemotron. [arXiv:2407.14679; hf]"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="minitron-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=16384,
+    vocab_size=256000, num_microbatches=4,
+    source="arXiv:2407.14679; hf",
+)
+
+SMOKE = FULL.replace(
+    name="minitron-8b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=512, max_seq=128, num_microbatches=1,
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,18 @@
+"""OPT-13B — the paper's own evaluation model (Table/Figs 4-17).
+[arXiv:2205.01068; hf]"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="opt13b", family="dense",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=40, d_ff=20480,
+    vocab_size=50272, rope=False, norm="layernorm",
+    max_seq=2048, num_microbatches=4,
+    source="arXiv:2205.01068; hf",
+)
+
+SMOKE = FULL.replace(
+    name="opt13b-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab_size=512, max_seq=128, num_microbatches=1,
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,18 @@
+"""qwen3-moe-30b-a3b [moe] 128 experts top-8. [hf:Qwen/Qwen3-30B-A3B; hf]"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, d_ff=768,
+    vocab_size=151936, n_experts=128, experts_per_token=8,
+    num_microbatches=4,
+    source="hf:Qwen/Qwen3-30B-A3B; hf",
+)
+
+SMOKE = FULL.replace(
+    name="qwen3-moe-30b-a3b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=96, vocab_size=512, n_experts=8, experts_per_token=2,
+    max_seq=128, num_microbatches=1,
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,16 @@
+"""starcoder2-15b [dense] GQA, RoPE. [arXiv:2402.19173; hf]"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="starcoder2-15b", family="dense",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=4, d_ff=24576,
+    vocab_size=49152, num_microbatches=8,
+    source="arXiv:2402.19173; hf",
+)
+
+SMOKE = FULL.replace(
+    name="starcoder2-15b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=512, max_seq=128, num_microbatches=1,
+)
+
+register(FULL, SMOKE)

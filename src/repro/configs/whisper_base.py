@@ -1,0 +1,21 @@
+"""whisper-base [audio] enc-dec, conv frontend stub.
+[arXiv:2212.04356; unverified]"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="whisper-base", family="encdec",
+    n_layers=6, n_encoder_layers=6,
+    d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+    vocab_size=51865,
+    frontend="audio", frontend_len=1500,   # 30s of audio -> 1500 frames
+    rope=False, norm="layernorm", tie_embeddings=True,
+    source="arXiv:2212.04356; unverified",
+)
+
+SMOKE = FULL.replace(
+    name="whisper-base-smoke", n_layers=2, n_encoder_layers=2,
+    d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=512,
+    frontend_len=16, max_seq=128, scan_layers=False,
+)
+
+register(FULL, SMOKE)

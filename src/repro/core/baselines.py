@@ -1,0 +1,106 @@
+"""Sparse-attention accuracy baselines (paper Fig. 11): H2O, local window,
+and plain SparQ — all on flat [B, S, KV, hd] K/V, used by the accuracy
+benchmark at small scale. SparF's production path lives in core/sparf.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _gqa(q, n_kv):
+    b, h, hd = q.shape
+    return q.reshape(b, n_kv, h // n_kv, hd)
+
+
+def dense_decode(q, k, v, length):
+    """Oracle: full attention over live tokens. q:[B,H,hd], k/v:[B,S,KV,hd]."""
+    b, s, kv, hd = k.shape
+    qg = _gqa(q, kv)
+    logits = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    mask = (jnp.arange(s) < length)[None, None, None, :]
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, -1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(q.shape).astype(q.dtype)
+
+
+def topk_mask_decode(q, k, v, length, keep, scores):
+    """Attend only to the top-`keep` tokens per head ranked by `scores`
+    [B,KV,G,S] (higher = keep)."""
+    b, s, kv, hd = k.shape
+    qg = _gqa(q, kv)
+    mask_live = (jnp.arange(s) < length)[None, None, None, :]
+    scores = jnp.where(mask_live, scores, NEG_INF)
+    _, idx = jax.lax.top_k(scores, min(keep, s))
+    sel = jnp.zeros(scores.shape, bool).at[
+        jnp.arange(b)[:, None, None, None],
+        jnp.arange(kv)[None, :, None, None],
+        jnp.arange(scores.shape[2])[None, None, :, None], idx].set(True)
+    logits = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    logits = jnp.where(sel & mask_live, logits, NEG_INF)
+    p = jax.nn.softmax(logits, -1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(q.shape).astype(q.dtype)
+
+
+def h2o_decode(q, k, v, length, keep, acc_scores, recent=None):
+    """H2O heavy-hitter: keep tokens with the largest *accumulated* attention
+    mass (acc_scores [B,KV,S], maintained by the caller across steps) plus a
+    recent window."""
+    b, s, kv, hd = k.shape
+    g = q.shape[1] // kv
+    recent = recent if recent is not None else max(1, keep // 4)
+    pos = jnp.arange(s)
+    recency_bonus = jnp.where(pos >= length - recent, 1e9, 0.0)
+    sc = acc_scores[:, :, None, :] + recency_bonus[None, None, None, :]
+    sc = jnp.broadcast_to(sc, (b, kv, g, s))
+    return topk_mask_decode(q, k, v, length, keep, sc)
+
+
+def local_decode(q, k, v, length, keep):
+    """Sliding-window attention: the most recent `keep` tokens."""
+    b, s, kv, hd = k.shape
+    g = q.shape[1] // kv
+    pos = jnp.arange(s).astype(jnp.float32)
+    sc = jnp.broadcast_to(pos[None, None, None, :], (b, kv, g, s))
+    return topk_mask_decode(q, k, v, length, keep, sc)
+
+
+def sparq_decode(q, k, v, length, r, keep, v_mean=None):
+    """Vanilla SparQ (Ribar et al.) on flat K/V: top-r channel approximate
+    scores -> top-k tokens -> exact attention + mean-V compensation."""
+    b, s, kv, hd = k.shape
+    qg = _gqa(q, kv).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    mask_live = (jnp.arange(s) < length)[None, None, None, :]
+    _, chan = jax.lax.top_k(jnp.abs(qg), min(r, hd))          # [B,KV,G,r]
+    q_r = jnp.take_along_axis(qg, chan, -1)
+    k_r = jnp.take_along_axis(
+        kf.transpose(0, 2, 3, 1)[:, :, None],                  # [B,KV,1,hd,S]
+        chan[..., None], axis=3)                               # [B,KV,G,r,S]
+    l1 = (jnp.sum(jnp.abs(q_r), -1)
+          / jnp.maximum(jnp.sum(jnp.abs(qg), -1), 1e-20))
+    temp = jnp.sqrt(hd * jnp.maximum(l1, 1e-20))
+    s_hat = jnp.einsum("bkgr,bkgrs->bkgs", q_r, k_r) / temp[..., None]
+    s_hat = jnp.where(mask_live, s_hat, NEG_INF)
+    p_hat = jax.nn.softmax(s_hat, -1)
+    top_p, idx = jax.lax.top_k(s_hat, min(keep, s))
+    alpha = jnp.sum(jnp.take_along_axis(p_hat, idx, -1), -1)   # [B,KV,G]
+    out_sel = topk_mask_decode(q, k, v, length, keep, s_hat)
+    out_sel = _gqa(out_sel, kv).astype(jnp.float32)
+    if v_mean is None:
+        live = mask_live[..., None]
+        v_mean = (jnp.sum(jnp.where(live[:, 0, 0], k[..., :0], 0), axis=1))
+        v_mean = jnp.sum(
+            jnp.where((jnp.arange(s) < length)[None, :, None, None],
+                      v.astype(jnp.float32), 0.0), axis=1) / jnp.maximum(
+                          length, 1)
+    out = (alpha[..., None] * out_sel
+           + (1 - alpha[..., None]) * v_mean[:, :, None, :])
+    return out.reshape(q.shape).astype(q.dtype)

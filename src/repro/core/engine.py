@@ -1,0 +1,111 @@
+"""Operator-placement planner — the paper's §III-B analysis as code.
+
+InstInfer's task split is NOT phase-level (prefill vs decode) but
+operator-level, decided by each operator's arithmetic intensity against
+the roofline of each engine (paper Fig. 6): an operator belongs on the
+storage side iff it is memory-bound there AND its operand bytes live in
+storage (so moving the operator is cheaper than moving the bytes).
+
+This module reproduces that decision procedure for (a) the paper's
+A6000 + Zynq7045-CSD testbed — recovering exactly the paper's split —
+and (b) the TPU transplant (MXU compute side vs KV-shard storage side),
+which is what core/offload.py implements. `benchmarks/placement.py`
+prints the full table (the Fig. 6 reproduction).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+
+@dataclass(frozen=True)
+class Engine:
+    name: str
+    flops: float              # peak FLOP/s
+    mem_bw: float             # bytes/s to its local operand store
+    link_bw: float            # bytes/s for small control/result transfers
+    bulk_bw: float = 0.0      # bytes/s for bulk operand egress (an SSD's
+                              # external FS path << its internal channels;
+                              # equal to link_bw on TPU). 0 -> link_bw.
+
+    @property
+    def egress(self) -> float:
+        return self.bulk_bw or self.link_bw
+
+
+# the paper's testbed (Fig. 6) and the TPU transplant. The CSD's bulk
+# egress is the SSD-over-filesystem path (5.5 GB/s x 0.30 efficiency) —
+# the whole reason KV must not travel (paper §III-A).
+GPU_A6000 = Engine("A6000", 38.7e12, 768e9, 12e9)
+CSD_ZYNQ = Engine("InstCSD", 0.44e12, 11.2e9, 12e9, bulk_bw=1.65e9)
+TPU_MXU = Engine("v5e-MXU", 197e12, 819e9, 50e9)
+TPU_KVSHARD = Engine("v5e-KV-shard", 197e12, 819e9, 50e9)
+
+
+@dataclass(frozen=True)
+class Operator:
+    name: str
+    phase: str                # prefill | decode
+    flops: float              # per step
+    bytes_weights: float      # operand bytes resident on the compute side
+    bytes_kv: float           # operand bytes resident on the storage side
+    out_bytes: float          # result bytes that must reach the compute side
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / max(self.bytes_weights + self.bytes_kv, 1.0)
+
+
+def opt13b_operators(batch: int = 64, seq: int = 1024,
+                     d: int = 5120, n_layers: int = 40) -> List[Operator]:
+    """The paper's OPT-13B operator set, per decode/prefill step."""
+    p_lin = 12 * d * d * n_layers          # qkv/o/ffn weights (~params)
+    kv = 2 * 2 * batch * seq * d * n_layers
+    ops = []
+    # prefill (per full sequence)
+    t = batch * seq
+    ops.append(Operator("QKV/O-Proj+FFN", "prefill", 2 * p_lin * t,
+                        2 * p_lin, 0, 2 * t * d))
+    ops.append(Operator("Attention", "prefill",
+                        4 * batch * seq * seq * d * n_layers, 0,
+                        kv, 2 * t * d))
+    # decode (per token step)
+    ops.append(Operator("QKV/O-Proj+FFN", "decode", 2 * p_lin * batch,
+                        2 * p_lin, 0, 2 * batch * d))
+    ops.append(Operator("Logit+Attend", "decode",
+                        4 * batch * seq * d * n_layers, 0, kv,
+                        2 * batch * d * n_layers))
+    return ops
+
+
+def time_on(op: Operator, eng: Engine, other: Engine, *,
+            storage_side: bool) -> float:
+    """Execution time of `op` on `eng`. Operand bytes living on the OTHER
+    engine cross at that engine's bulk-egress bandwidth; small results
+    cross at link bandwidth."""
+    local = op.bytes_kv if storage_side else op.bytes_weights
+    remote = op.bytes_weights if storage_side else op.bytes_kv
+    t_compute = op.flops / eng.flops
+    t_local = local / eng.mem_bw
+    t_remote = remote / other.egress + op.out_bytes / eng.link_bw
+    return max(t_compute, t_local) + t_remote
+
+
+def place(op: Operator, compute: Engine, storage: Engine) -> dict:
+    t_c = time_on(op, compute, storage, storage_side=False)
+    t_s = time_on(op, storage, compute, storage_side=True)
+    return {"op": op.name, "phase": op.phase,
+            "intensity": op.intensity,
+            "t_compute_side_s": t_c, "t_storage_side_s": t_s,
+            "placement": "storage" if t_s < t_c else "compute"}
+
+
+def plan(operators: List[Operator], compute: Engine,
+         storage: Engine) -> List[dict]:
+    return [place(op, compute, storage) for op in operators]
+
+
+def paper_plan(batch: int = 64) -> List[dict]:
+    """Reproduces the paper's split: everything on the GPU except
+    decode-phase Logit+Attend, which goes to the CSD."""
+    return plan(opt13b_operators(batch), GPU_A6000, CSD_ZYNQ)

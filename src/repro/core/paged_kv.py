@@ -1,0 +1,244 @@
+"""Paged, dual-indexed KV storage — the TPU analogue of InstInfer's
+KV-cache-oriented FTL (paper §IV-C).
+
+Layout (per attention layer; stacked over layers at the top level):
+
+  k_pages : [B, W, kv_loc, P_loc, page, hd]   token-indexed K
+  v_pages : [B, W, kv_loc, P_loc, page, hd]   token-indexed V
+  k_embed : [B, W, kv_loc, hd, S_loc]         embedding-indexed K (dual copy)
+  v_sum   : [B, KV, hd] f32                   running ΣV for mean-V (Alg.1 v̄)
+  block_table : [B, W, kv_loc, P_loc] i32     logical->physical page map (FTL)
+
+W = size of the `model` mesh axis = the "CSD array". Each worker w owns
+kv-head shard w // seq_shards and the page stripe w % seq_shards — the
+paper's head-major, channel-strided placement: heads across CSDs, pages of
+one head strided across "flash channels" (here: sequence shards) so every
+head can use full aggregate bandwidth.
+
+page = 16 tokens (paper: 16 tokens x 128 fp16 = one 4KB flash page). All
+reads/writes are page-granular; the dual-step load fetches whole pages and
+filters weak tokens afterwards (NFC filter), which on TPU keeps every
+HBM->VMEM DMA tile-aligned.
+
+The K matrix is stored TWICE (token-indexed + embedding-indexed) — the
+paper's capacity-for-bandwidth trade; the transposed copy makes the top-r
+channel gather a contiguous-lane read.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class KVLayout:
+    """Static layout descriptor (not traced)."""
+    n_kv_heads: int
+    head_dim: int
+    page: int            # tokens per page (paper's group size m)
+    n_pages: int         # total logical pages (max_seq / page)
+    n_workers: int       # W = model-axis size (the CSD array)
+    kv_shards: int       # heads split
+    seq_shards: int      # page stripes per head
+
+    @property
+    def kv_loc(self) -> int:
+        return self.n_kv_heads // self.kv_shards
+
+    @property
+    def pages_loc(self) -> int:
+        return self.n_pages // self.seq_shards
+
+    @property
+    def seq_loc(self) -> int:
+        return self.pages_loc * self.page
+
+    @property
+    def max_seq(self) -> int:
+        return self.n_pages * self.page
+
+    # ---- address translation (the FTL) ----
+    def page_of(self, pos):
+        return pos // self.page
+
+    def slot_of(self, pos):
+        return pos % self.page
+
+    def stripe_of(self, page):
+        """Which sequence-shard owns a global page (strided placement)."""
+        return page % self.seq_shards
+
+    def local_page(self, page):
+        return page // self.seq_shards
+
+    def global_page(self, stripe, local_page):
+        return local_page * self.seq_shards + stripe
+
+    def worker_of(self, kv_shard, stripe):
+        return kv_shard * self.seq_shards + stripe
+
+
+def make_layout(cfg, max_seq: int, n_workers: int) -> KVLayout:
+    page = cfg.sparf.page_tokens
+    n_pages = -(-max_seq // page)
+    kv = max(cfg.n_kv_heads, 1)
+    kv_shards = math.gcd(kv, n_workers)
+    seq_shards = n_workers // kv_shards
+    # pages must stripe evenly
+    n_pages = -(-n_pages // seq_shards) * seq_shards
+    return KVLayout(n_kv_heads=kv, head_dim=cfg.head_dim, page=page,
+                    n_pages=n_pages, n_workers=n_workers,
+                    kv_shards=kv_shards, seq_shards=seq_shards)
+
+
+def init_layer_cache(layout: KVLayout, batch: int, dtype) -> dict:
+    L = layout
+    shape_pages = (batch, L.n_workers, L.kv_loc, L.pages_loc, L.page, L.head_dim)
+    return {
+        "k_pages": jnp.zeros(shape_pages, dtype),
+        "v_pages": jnp.zeros(shape_pages, dtype),
+        "k_embed": jnp.zeros((batch, L.n_workers, L.kv_loc, L.head_dim,
+                              L.seq_loc), dtype),
+        "v_sum": jnp.zeros((batch, L.n_kv_heads, L.head_dim), jnp.float32),
+        "block_table": jnp.broadcast_to(
+            jnp.arange(L.pages_loc, dtype=jnp.int32),
+            (batch, L.n_workers, L.kv_loc, L.pages_loc)),
+        "page_valid": jnp.ones((batch, L.n_workers, L.kv_loc, L.pages_loc),
+                               bool),
+    }
+
+
+def cache_specs(layout: KVLayout, pol) -> dict:
+    """PartitionSpecs for one layer's cache under the given policy."""
+    from jax.sharding import PartitionSpec as P
+    b = getattr(pol, "batch_spec", None)
+    w = "model" if layout.n_workers > 1 else None
+    return {
+        "k_pages": P(b, w, None, None, None, None),
+        "v_pages": P(b, w, None, None, None, None),
+        "k_embed": P(b, w, None, None, None),
+        "v_sum": P(b, None, None),
+        "block_table": P(b, w, None, None),
+        "page_valid": P(b, w, None, None),
+    }
+
+
+def append_token(layout: KVLayout, cache: dict, k_new, v_new, pos) -> dict:
+    """Append one token's K/V (decode step). k_new, v_new: [B, KV, hd].
+
+    Page-granular write: the token lands in its page slot; the
+    embedding-indexed copy gets the matching column. pos: traced scalar.
+    """
+    L = layout
+    b = k_new.shape[0]
+    page = L.page_of(pos)
+    slot = L.slot_of(pos)
+    stripe = L.stripe_of(page)
+    lp = L.local_page(page)
+    # workers that receive this token: one per kv shard
+    ws = jnp.arange(L.kv_shards, dtype=jnp.int32) * L.seq_shards + stripe
+    # advanced indexing puts the ws dim first: values must be [kvs, B, kv_loc, hd]
+    k_r = k_new.reshape(b, L.kv_shards, L.kv_loc, L.head_dim).swapaxes(0, 1)
+    v_r = v_new.reshape(b, L.kv_shards, L.kv_loc, L.head_dim).swapaxes(0, 1)
+    cache = dict(cache)
+    cache["k_pages"] = cache["k_pages"].at[:, ws, :, lp, slot, :].set(
+        k_r.astype(cache["k_pages"].dtype))
+    cache["v_pages"] = cache["v_pages"].at[:, ws, :, lp, slot, :].set(
+        v_r.astype(cache["v_pages"].dtype))
+    t_loc = lp * L.page + slot
+    cache["k_embed"] = cache["k_embed"].at[:, ws, :, :, t_loc].set(
+        k_r.astype(cache["k_embed"].dtype))
+    cache["v_sum"] = cache["v_sum"] + v_new.astype(jnp.float32)
+    return cache
+
+
+def write_prefill(layout: KVLayout, cache: dict, k, v, lengths=None) -> dict:
+    """Bulk write after prefill. k, v: [B, S, KV, hd] (S <= max_seq).
+
+    This is the layer-wise KV "transmission" from compute to storage layout:
+    a reshape/transpose into the strided page placement. Under pjit the
+    reshard overlaps the next layer's compute (paper's layer-wise pipeline).
+    """
+    L = layout
+    bsz, s, kv, hd = k.shape
+    pad = L.max_seq - s
+
+    def to_pages(x):
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # [B, n_pages, page, KV, hd] -> strided stripes
+        x = x.reshape(bsz, L.n_pages, L.page, kv, hd)
+        # page p -> (stripe p % seq_shards, local p // seq_shards)
+        x = x.reshape(bsz, L.pages_loc, L.seq_shards, L.page, kv, hd)
+        # split kv into shards: worker w = kv_shard * seq_shards + stripe
+        x = x.reshape(bsz, L.pages_loc, L.seq_shards, L.page, L.kv_shards,
+                      L.kv_loc, hd)
+        # -> [B, kv_shards, seq_shards, kv_loc, pages_loc, page, hd]
+        x = x.transpose(0, 4, 2, 5, 1, 3, 6)
+        return x.reshape(bsz, L.n_workers, L.kv_loc, L.pages_loc, L.page, hd)
+
+    k_pg = to_pages(k)
+    v_pg = to_pages(v)
+    # embedding-indexed copy: [B, W, kv_loc, hd, S_loc]
+    k_emb = k_pg.reshape(bsz, L.n_workers, L.kv_loc, L.seq_loc, hd) \
+                .swapaxes(-1, -2)
+    if lengths is None:
+        v_sum = jnp.sum(v.astype(jnp.float32), axis=1)
+    else:
+        mask = (jnp.arange(s) < lengths)[None, :, None, None]
+        v_sum = jnp.sum(jnp.where(mask, v.astype(jnp.float32), 0.0), axis=1)
+    cache = dict(cache)
+    cache["k_pages"] = k_pg.astype(cache["k_pages"].dtype)
+    cache["v_pages"] = v_pg.astype(cache["v_pages"].dtype)
+    cache["k_embed"] = k_emb.astype(cache["k_embed"].dtype)
+    cache["v_sum"] = v_sum
+    return cache
+
+
+def local_positions(layout: KVLayout, stripe):
+    """Global token positions of a worker's local sequence, [S_loc]."""
+    L = layout
+    lp = jnp.arange(L.pages_loc, dtype=jnp.int32)
+    slot = jnp.arange(L.page, dtype=jnp.int32)
+    gp = lp * L.seq_shards + stripe
+    return (gp[:, None] * L.page + slot[None, :]).reshape(-1)
+
+
+def evict_pages(layout: KVLayout, cache: dict, keep_mask) -> dict:
+    """FTL-level eviction: retire whole pages from the logical view WITHOUT
+    touching stored bytes — a metadata-only update (the reason the FTL owns
+    the mapping; zero data movement, zero write amplification).
+
+    keep_mask: [n_pages] bool over GLOBAL logical pages (True = retain).
+    Workers mask retired pages' tokens at read time. This is the retention
+    hook for context truncation / H2O-style page retirement at the paper's
+    page granularity.
+    """
+    L = layout
+    km = jnp.asarray(keep_mask, bool)
+    # global page p -> (stripe p % seq_shards, local p // seq_shards);
+    # per-worker local view: [W, P_loc]
+    stripes = jnp.arange(L.n_pages) % L.seq_shards
+    locals_ = jnp.arange(L.n_pages) // L.seq_shards
+    per_stripe = jnp.zeros((L.seq_shards, L.pages_loc), bool
+                           ).at[stripes, locals_].set(km)
+    per_worker = jnp.tile(per_stripe, (L.kv_shards, 1))       # [W, P_loc]
+    cache = dict(cache)
+    pv = cache.get("page_valid")
+    if pv is None:
+        b = cache["k_pages"].shape[0]
+        pv = jnp.ones((b, L.n_workers, L.kv_loc, L.pages_loc), bool)
+    cache["page_valid"] = pv & per_worker[None, :, None, :]
+    return cache
+
+
+def gather_pages(pages, page_idx, block_table=None):
+    """Fetch pages by (possibly repeated) logical page index — the FTL read
+    path. pages: [..., P, page, hd]; page_idx: [..., n] -> [..., n, page, hd].
+    block_table translates logical -> physical first."""
+    if block_table is not None:
+        page_idx = jnp.take_along_axis(block_table, page_idx, axis=-1)
+    return jnp.take_along_axis(
+        pages, page_idx[..., None, None], axis=-3)

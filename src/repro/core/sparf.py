@@ -1,0 +1,219 @@
+"""SparF Attention (paper Algorithm 1) — per-worker local math.
+
+Every function here operates on ONE worker's shard of the paged KV store
+(`core.paged_kv`), i.e. inside the shard_map that models the CSD array
+(`core.offload`). Workers return flash-style partial statistics
+(m = running max, l = denominator, acc = weighted value sum) so the caller
+can combine across sequence stripes of the same head with a pmax+psum —
+only attention outputs ever cross the interconnect.
+
+Step numbering follows Algorithm 1:
+  1   top-r channels of |q|
+  2-3 page-granular channel load + filter (embedding-indexed K copy)
+  4   approximate scores ŝ with the ||q_r||1/||q||1 temperature correction
+  5-6 top-k token selection (per-shard budget k_loc = k / seq_shards)
+  7   α = selected probability mass (combined globally by the caller)
+  8-9 page-granular token load + filter (token-indexed K,V)
+  10  exact softmax over the selected tokens
+  11  out = α·Attn_sel + (1-α)·v̄   (applied by the caller after combine)
+
+The jnp reference implements the *math*; the page-granular *access pattern*
+(whole-page DMA + in-VMEM filter) is what kernels/sparf_decode.py realizes.
+The math is identical by construction: steps 3/9 discard exactly the bytes
+page-granularity over-fetched.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paged_kv import KVLayout, gather_pages, local_positions
+
+NEG_INF = -1e30
+
+
+class Partial(NamedTuple):
+    """Flash-combine partial statistics for a set of scored tokens."""
+    m: jax.Array      # [B, kv_loc, G]         running max of logits
+    l: jax.Array      # [B, kv_loc, G]         sum exp(logit - m)
+    acc: jax.Array    # [B, kv_loc, G, hd]     sum exp(logit - m) * v
+
+
+class SparFPartial(NamedTuple):
+    exact: Partial            # stats over the selected tokens (steps 8-10)
+    m_hat: jax.Array          # [B, kv_loc, G] max of approximate logits
+    l_hat_all: jax.Array      # [B, kv_loc, G] Σ exp over ALL local tokens
+    l_hat_sel: jax.Array      # [B, kv_loc, G] Σ exp over selected tokens
+
+
+def _valid_mask(layout: KVLayout, stripe, length):
+    """[S_loc] bool: which local slots hold live tokens (< length)."""
+    pos = local_positions(layout, stripe)
+    return pos < length, pos
+
+
+def _token_valid(layout, stripe, length, page_valid, b, kv):
+    """[B, kv_loc, S_loc] bool: live (< length) AND page not retired."""
+    valid, _ = _valid_mask(layout, stripe, length)
+    tok = jnp.broadcast_to(valid[None, None, :], (b, kv, valid.shape[0]))
+    if page_valid is not None:
+        pv = jnp.repeat(page_valid, layout.page, axis=-1)
+        tok = tok & pv
+    return tok
+
+
+def dense_worker(layout: KVLayout, q, k_pages, v_pages, stripe, length,
+                 page_valid=None) -> Partial:
+    """Dense decode attention over one worker's pages (InstI-Dense).
+
+    q: [B, kv_loc, G, hd]; k_pages/v_pages: [B, kv_loc, P_loc, page, hd];
+    page_valid: [B, kv_loc, P_loc] bool or None (FTL retirement mask).
+    """
+    b, kv, g, hd = q.shape
+    k = k_pages.reshape(b, kv, -1, hd)          # [B, kv, S_loc, hd]
+    v = v_pages.reshape(b, kv, -1, hd)
+    valid = _token_valid(layout, stripe, length, page_valid, b, kv)
+    # compute in storage dtype with f32 accumulation: avoids materializing
+    # an f32 copy of the whole KV shard (§Perf iteration 1)
+    logits = jnp.einsum("bkgh,bksh->bkgs", q.astype(k.dtype), k,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    logits = jnp.where(valid[:, :, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(valid[:, :, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgs,bksh->bkgh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return Partial(m, l, acc)
+
+
+def combine_partials(part: Partial, axis_name=None,
+                     wire_dtype=None) -> jax.Array:
+    """Combine flash partials across the model axis (or locally if None).
+    Returns [B, kv_loc, G, hd] float32 attention output.
+
+    wire_dtype (e.g. bf16) compresses the psum'd tensors — halves the
+    decode collective term; the max-normalized exponentials are in [0, 1]
+    so bf16 relative error is benign (§Perf iteration)."""
+    if axis_name is None:
+        return part.acc / jnp.maximum(part.l, 1e-20)[..., None]
+    m_glob = jax.lax.pmax(part.m, axis_name)
+    corr = jnp.exp(part.m - m_glob)
+    l = part.l * corr
+    acc = part.acc * corr[..., None]
+    if wire_dtype is not None:
+        l, acc = l.astype(wire_dtype), acc.astype(wire_dtype)
+    l = jax.lax.psum(l, axis_name).astype(jnp.float32)
+    acc = jax.lax.psum(acc, axis_name).astype(jnp.float32)
+    return acc / jnp.maximum(l, 1e-20)[..., None]
+
+
+def sparf_worker(layout: KVLayout, scfg, q, k_pages, v_pages, k_embed,
+                 block_table, stripe, length,
+                 page_valid=None) -> SparFPartial:
+    """SparF Algorithm 1 on one worker's shard.
+
+    q: [B, kv_loc, G, hd]
+    k_pages/v_pages: [B, kv_loc, P_loc, page, hd]
+    k_embed: [B, kv_loc, hd, S_loc]
+    page_valid: [B, kv_loc, P_loc] bool or None (FTL retirement mask)
+    """
+    b, kv, g, hd = q.shape
+    r = min(scfg.rank_r, hd)
+    k_budget = max(1, scfg.top_k // max(layout.seq_shards, 1))
+    s_loc = layout.seq_loc
+    k_budget = min(k_budget, s_loc)
+    valid = _token_valid(layout, stripe, length, page_valid, b, kv)
+    qf = q.astype(jnp.float32)
+
+    # ---- step 1: top-r channels of |q| ----
+    _, chan_idx = jax.lax.top_k(jnp.abs(qf), r)               # [B,kv,G,r]
+    q_r = jnp.take_along_axis(qf, chan_idx, axis=-1)          # [B,kv,G,r]
+
+    # ---- steps 2-3: channel-gather from the embedding-indexed copy ----
+    # (kernel fetches channel *groups* of size n and filters; math identical)
+    # gather in storage dtype with FLATTENED (G*r) indices on the
+    # un-broadcast store: a [B,kv,G,hd,S] broadcast of the whole copy would
+    # otherwise materialize G x the KV bytes (§Perf iterations 1+4)
+    k_r = jnp.take_along_axis(
+        k_embed, chan_idx.reshape(b, kv, g * r)[..., None], axis=2
+    ).reshape(b, kv, g, r, s_loc)                             # [B,kv,G,r,S]
+
+    # ---- step 4: approximate scores with L1 temperature correction ----
+    l1_frac = (jnp.sum(jnp.abs(q_r), -1)
+               / jnp.maximum(jnp.sum(jnp.abs(qf), -1), 1e-20))  # [B,kv,G]
+    temp = jnp.sqrt(hd * jnp.maximum(l1_frac, 1e-20))
+    s_hat = jnp.einsum("bkgr,bkgrs->bkgs", q_r.astype(k_r.dtype), k_r,
+                       preferred_element_type=jnp.float32) / temp[..., None]
+    s_hat = jnp.where(valid[:, :, None, :], s_hat, NEG_INF)
+
+    # ---- steps 5-6: top-k token selection (per-stripe budget) ----
+    top_vals, tok_idx = jax.lax.top_k(s_hat, k_budget)        # [B,kv,G,k]
+
+    # ---- step 7 (local part): selected / total approximate mass ----
+    m_hat = jnp.max(s_hat, axis=-1)
+    e_all = jnp.where(valid[:, :, None, :],
+                      jnp.exp(s_hat - m_hat[..., None]), 0.0)
+    l_hat_all = jnp.sum(e_all, axis=-1)
+    sel_valid = top_vals > NEG_INF / 2
+    l_hat_sel = jnp.sum(jnp.where(sel_valid,
+                                  jnp.exp(top_vals - m_hat[..., None]), 0.0),
+                        axis=-1)
+
+    # ---- steps 8-9: page-granular token fetch + in-buffer filter ----
+    page_idx = tok_idx // layout.page                          # [B,kv,G,k]
+    slot_idx = tok_idx % layout.page
+    # fetch whole pages (the flash access; block_table = FTL translation),
+    # flattened (G*k) indices against the un-broadcast store (§Perf it. 4)
+    flat_pages = jnp.take_along_axis(
+        block_table, page_idx.reshape(b, kv, g * k_budget), axis=-1)
+    k_sel_pages = jnp.take_along_axis(
+        k_pages, flat_pages[..., None, None], axis=2)
+    v_sel_pages = jnp.take_along_axis(
+        v_pages, flat_pages[..., None, None], axis=2)
+    # NFC filter: keep only the selected slot of each fetched page
+    flat_slots = slot_idx.reshape(b, kv, g * k_budget)
+    k_sel = jnp.take_along_axis(
+        k_sel_pages, flat_slots[..., None, None], axis=-2
+    )[..., 0, :].reshape(b, kv, g, k_budget, hd)
+    v_sel = jnp.take_along_axis(
+        v_sel_pages, flat_slots[..., None, None], axis=-2
+    )[..., 0, :].reshape(b, kv, g, k_budget, hd)
+
+    # ---- step 10: exact softmax over selected tokens ----
+    logits = jnp.einsum("bkgh,bkgsh->bkgs", qf.astype(k_sel.dtype), k_sel,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    logits = jnp.where(sel_valid, logits, NEG_INF)
+    m2 = jnp.max(logits, axis=-1)
+    p = jnp.where(sel_valid, jnp.exp(logits - m2[..., None]), 0.0)
+    l2 = jnp.sum(p, axis=-1)
+    acc2 = jnp.einsum("bkgs,bkgsh->bkgh", p.astype(v_sel.dtype), v_sel,
+                      preferred_element_type=jnp.float32)
+    return SparFPartial(Partial(m2, l2, acc2), m_hat, l_hat_all, l_hat_sel)
+
+
+def combine_sparf(part: SparFPartial, v_mean, axis_name=None,
+                  wire_dtype=None) -> jax.Array:
+    """Global combine of SparF partials + step 11 mean-V compensation.
+
+    v_mean: [B, kv_loc, hd] f32 — running mean of ALL V vectors (v̄).
+    Returns [B, kv_loc, G, hd] f32.
+    """
+    out_exact = combine_partials(part.exact, axis_name, wire_dtype)
+    if axis_name is None:
+        alpha = part.l_hat_sel / jnp.maximum(part.l_hat_all, 1e-20)
+    else:
+        m_glob = jax.lax.pmax(part.m_hat, axis_name)
+        corr = jnp.exp(part.m_hat - m_glob)
+        sel = part.l_hat_sel * corr
+        tot = part.l_hat_all * corr
+        if wire_dtype is not None:
+            sel, tot = sel.astype(wire_dtype), tot.astype(wire_dtype)
+        sel = jax.lax.psum(sel, axis_name).astype(jnp.float32)
+        tot = jax.lax.psum(tot, axis_name).astype(jnp.float32)
+        alpha = sel / jnp.maximum(tot, 1e-20)
+    alpha = jnp.clip(alpha, 0.0, 1.0)[..., None]               # [B,kv,G,1]
+    return alpha * out_exact + (1.0 - alpha) * v_mean[:, :, None, :]

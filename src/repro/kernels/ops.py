@@ -1,0 +1,93 @@
+"""jit'd wrappers over the Pallas kernels, plus the composed SparF op
+(kernel-1 -> host argtopk -> kernel-2 -> mean-V compensation), matching
+core/sparf.py math. On CPU these run with interpret=True; on TPU set
+REPRO_PALLAS_COMPILE=1 (or pass interpret=False).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba_scan as _ms
+from repro.kernels import paged_attention as _pa
+from repro.kernels import sparf_decode as _sd
+
+NEG_INF = -1e30
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q, k, v, causal=True, bq=128, bk=128):
+    return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                               interpret=_interpret())
+
+
+@jax.jit
+def paged_attention(q, k_pages, v_pages, block_table, length):
+    return _pa.paged_attention(q, k_pages, v_pages, block_table, length,
+                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("rank_r", "top_k"))
+def sparf_attention(q, k_pages, v_pages, k_embed, block_table, v_sum,
+                    length, rank_r: int, top_k: int):
+    """Full SparF Alg.1 on one worker via the two kernels.
+
+    q: [B,KV,G,hd]; k_pages/v_pages: [B,KV,P,page,hd];
+    k_embed: [B,KV,hd,S]; v_sum: [B,KV,hd] f32. Returns [B,KV,G,hd] f32.
+    """
+    b, kv, g, hd = q.shape
+    s = k_embed.shape[-1]
+    page = k_pages.shape[-2]
+    qf = q.astype(jnp.float32)
+    r = min(rank_r, hd)
+    ksel = min(top_k, s)
+
+    # step 1 (argtopk unit): top-r channels of |q|
+    _, chan_idx = jax.lax.top_k(jnp.abs(qf), r)
+    q_r = jnp.take_along_axis(qf, chan_idx, axis=-1)
+
+    # steps 2-4 (kernel 1): channel-row gather + approximate logits
+    s_hat = _sd.approx_scores(q_r, chan_idx.astype(jnp.int32), k_embed,
+                              interpret=_interpret())
+    l1 = (jnp.sum(jnp.abs(q_r), -1)
+          / jnp.maximum(jnp.sum(jnp.abs(qf), -1), 1e-20))
+    temp = jnp.sqrt(hd * jnp.maximum(l1, 1e-20))
+    s_hat = s_hat / temp[..., None]
+    s_hat = jnp.where((jnp.arange(s) < length)[None, None, None], s_hat,
+                      NEG_INF)
+
+    # steps 5-7 (argtopk unit): token selection + alpha mass
+    top_vals, tok_idx = jax.lax.top_k(s_hat, ksel)
+    sel_valid = top_vals > NEG_INF / 2
+    m_hat = jnp.max(s_hat, axis=-1)
+    e_all = jnp.where((jnp.arange(s) < length)[None, None, None],
+                      jnp.exp(s_hat - m_hat[..., None]), 0.0)
+    alpha = (jnp.sum(jnp.where(sel_valid,
+                               jnp.exp(top_vals - m_hat[..., None]), 0.0), -1)
+             / jnp.maximum(jnp.sum(e_all, -1), 1e-20))
+
+    # steps 8-10 (kernel 2): page fetch + NFC filter + exact softmax
+    num, m, l = _sd.selected_attention(
+        q, k_pages, v_pages, block_table, tok_idx.astype(jnp.int32),
+        sel_valid, interpret=_interpret())
+    out_exact = num / jnp.maximum(l, 1e-20)[..., None]
+
+    # step 11: mean-V compensation
+    v_mean = v_sum / jnp.maximum(length, 1).astype(jnp.float32)
+    alpha = jnp.clip(alpha, 0.0, 1.0)[..., None]
+    return alpha * out_exact + (1 - alpha) * v_mean[:, :, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mamba_scan(a_bar, bx, c_t, chunk=64):
+    return _ms.mamba_scan(a_bar, bx, c_t, chunk=chunk,
+                          interpret=_interpret())

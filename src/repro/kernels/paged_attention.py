@@ -1,0 +1,102 @@
+"""Paged decode attention Pallas kernel (InstI-Dense on one worker).
+
+The FTL lives in the index_map: the block table is passed through
+PrefetchScalarGridSpec, and each grid step's K/V page DMA is addressed by
+`block_table[b, kv, i]` — logical->physical translation happens *before*
+the HBM->VMEM copy, exactly the role of InstInfer's FTL, and every copy is
+one whole page (page-granular access discipline).
+
+Grid (B, KV, n_pages); online-softmax scratch carries across pages; the
+G query heads of a kv head are processed together (GQA: q block [G, hd]).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_s, l_s, acc_s, *, page, n_pages):
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    length = len_ref[0]
+    # page is live iff its first position < length (logical index!)
+    @pl.when(pi * page < length)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)              # [G, hd]
+        k = k_ref[0, 0, 0].astype(jnp.float32)           # [page, hd]
+        v = v_ref[0, 0, 0].astype(jnp.float32)
+        hd = q.shape[-1]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s / np.sqrt(hd)                              # [G, page]
+        pos = pi * page + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(pos < length, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(pi == n_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_s[...]
+                       / jnp.maximum(l_s[...], 1e-20)).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_table, length, *,
+                    interpret=True):
+    """q: [B, KV, G, hd]; k_pages/v_pages: [B, KV, P, page, hd];
+    block_table: [B, KV, P] int32; length: scalar int32.
+    Returns [B, KV, G, hd]."""
+    b, kv, g, hd = q.shape
+    _, _, n_pages, page, _ = k_pages.shape
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_paged_kernel, page=page, n_pages=n_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                # block_table, length
+        grid=(b, kv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda b_, k_, p_, bt, ln: (b_, k_, 0, 0)),
+            # FTL translation: fetch physical page bt[b, kv, p]
+            pl.BlockSpec((1, 1, 1, page, hd),
+                         lambda b_, k_, p_, bt, ln:
+                         (b_, k_, bt[b_, k_, p_], 0, 0)),
+            pl.BlockSpec((1, 1, 1, page, hd),
+                         lambda b_, k_, p_, bt, ln:
+                         (b_, k_, bt[b_, k_, p_], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b_, k_, p_, bt, ln: (b_, k_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, length, q, k_pages, v_pages)

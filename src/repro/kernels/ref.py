@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references).
+
+These share math with the framework paths (models/layers.py, core/sparf.py)
+but are standalone so kernel tests do not depend on framework plumbing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ---- flash_attention oracle -------------------------------------------------
+
+def flash_attention(q, k, v, causal=True):
+    """q: [B,H,Sq,hd], k/v: [B,H,Sk,hd] -> [B,H,Sq,hd]."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bhqk,bhck->bhqc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = (jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+                + (sk - sq))
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqc,bhck->bhqk", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---- paged_attention oracle -------------------------------------------------
+
+def paged_attention(q, k_pages, v_pages, block_table, length):
+    """Dense decode attention over a paged store.
+
+    q: [B, KV, G, hd]; k_pages/v_pages: [B, KV, P, page, hd];
+    block_table: [B, KV, P] int32 logical->physical; length: int.
+    """
+    b, kv, p, page, hd = k_pages.shape
+    k = jnp.take_along_axis(k_pages, block_table[..., None, None], axis=2)
+    v = jnp.take_along_axis(v_pages, block_table[..., None, None], axis=2)
+    k = k.reshape(b, kv, p * page, hd)
+    v = v.reshape(b, kv, p * page, hd)
+    s = jnp.einsum("bkgh,bksh->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    valid = jnp.arange(p * page) < length
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bksh->bkgh", pr,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---- sparf oracles ----------------------------------------------------------
+
+def sparf_approx_scores(q_r, chan_idx, k_embed, length):
+    """Step 2-4 of Alg.1 (pre-softmax logits).
+
+    q_r: [B,KV,G,r] selected |q| values; chan_idx: [B,KV,G,r] int32;
+    k_embed: [B,KV,hd,S]. Returns logits [B,KV,G,S] with dead tokens at
+    NEG_INF (temperature applied by caller)."""
+    k_r = jnp.take_along_axis(k_embed[:, :, None].astype(jnp.float32),
+                              chan_idx[..., None], axis=3)   # [B,KV,G,r,S]
+    s_hat = jnp.einsum("bkgr,bkgrs->bkgs", q_r.astype(jnp.float32), k_r)
+    s = k_embed.shape[-1]
+    return jnp.where((jnp.arange(s) < length)[None, None, None], s_hat,
+                     NEG_INF)
+
+
+def sparf_selected_attention(q, k_pages, v_pages, block_table, tok_idx,
+                             sel_valid):
+    """Steps 8-10: exact attention over selected tokens, page-granular fetch
+    + slot filter. q: [B,KV,G,hd]; tok_idx: [B,KV,G,ksel] (logical token
+    ids); sel_valid: [B,KV,G,ksel] bool. Returns (out [B,KV,G,hd] f32,
+    m [B,KV,G], l [B,KV,G])."""
+    b, kv, p, page, hd = k_pages.shape
+    page_idx = tok_idx // page
+    slot_idx = tok_idx % page
+    bt = jnp.broadcast_to(block_table[:, :, None],
+                          page_idx.shape[:3] + (p,))
+    phys = jnp.take_along_axis(bt, page_idx, axis=-1)
+    def fetch(pages):
+        x = jnp.broadcast_to(pages[:, :, None],
+                             (b, kv, q.shape[2]) + pages.shape[2:])
+        x = jnp.take_along_axis(x, phys[..., None, None], axis=3)
+        return jnp.take_along_axis(
+            x, slot_idx[..., None, None], axis=-2)[..., 0, :]
+    k_sel = fetch(k_pages)
+    v_sel = fetch(v_pages)
+    logits = jnp.einsum("bkgh,bkgsh->bkgs", q.astype(jnp.float32),
+                        k_sel.astype(jnp.float32)) / np.sqrt(hd)
+    logits = jnp.where(sel_valid, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)
+    pr = jnp.where(sel_valid, jnp.exp(logits - m[..., None]), 0.0)
+    l = jnp.sum(pr, axis=-1)
+    out = jnp.einsum("bkgs,bkgsh->bkgh", pr, v_sel.astype(jnp.float32))
+    return out / jnp.maximum(l, 1e-20)[..., None], m, l
+
+
+# ---- mamba_scan oracle ------------------------------------------------------
+
+def mamba_scan(a_bar, bx, c_t, h0=None):
+    """Selective scan. a_bar, bx: [B,T,D,N]; c_t: [B,T,N]; h0: [B,D,N].
+    Returns y [B,T,D] f32 and final h."""
+    b, t, d, n = a_bar.shape
+    h = jnp.zeros((b, d, n), jnp.float32) if h0 is None else h0
+
+    def step(h, args):
+        ab, bxt, ct = args
+        h = ab * h + bxt
+        return h, jnp.einsum("bdn,bn->bd", h, ct)
+
+    h, ys = jax.lax.scan(step, h, (a_bar.swapaxes(0, 1), bx.swapaxes(0, 1),
+                                   c_t.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h

@@ -1,0 +1,175 @@
+"""SparF decode kernels — the in-storage attention engine of InstCSD,
+realized as two Pallas kernels around a host-side top-k (the argtopk unit):
+
+  1. `approx_scores`  — steps 2-4 of Alg.1: gathers the top-r K *channels*
+     from the embedding-indexed copy. The channel index is scalar-prefetched
+     and applied in the index_map, so each grid step DMAs exactly one
+     channel row (a contiguous [1, S] lane read — why K is stored twice).
+  2. `selected_attention` — steps 8-10: gathers the top-k tokens' *pages*
+     (block-table translation in the index_map = FTL) and applies the
+     in-VMEM slot filter (the NFC filter) before the exact softmax.
+
+The dual-step load is structural: step 2's DMA is page/row-granular, the
+weak elements are discarded only after they are in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------------
+# kernel 1: approximate scores from top-r channels
+# ----------------------------------------------------------------------------
+
+def _approx_kernel(chan_ref, qr_ref, ke_ref, s_ref, acc_s, *, r):
+    ri = pl.program_id(3)
+
+    @pl.when(ri == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    qv = qr_ref[0, 0, 0, ri]                          # scalar q_r value
+    krow = ke_ref[0, 0, 0].astype(jnp.float32)        # [1, S] channel row
+    acc_s[...] += qv.astype(jnp.float32) * krow
+
+    @pl.when(ri == r - 1)
+    def _finalize():
+        s_ref[0, 0, 0] = acc_s[0]
+
+
+def approx_scores(q_r, chan_idx, k_embed, *, interpret=True):
+    """q_r: [B,KV,G,r] (selected q values); chan_idx: [B,KV,G,r] int32;
+    k_embed: [B,KV,hd,S]. Returns pre-temperature logits [B,KV,G,S] f32.
+    Masking/temperature are applied by the caller (ops.sparf_attention)."""
+    b, kv, g, r = q_r.shape
+    s = k_embed.shape[-1]
+
+    kernel = functools.partial(_approx_kernel, r=r)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                 # chan_idx
+        grid=(b, kv, g, r),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, r),
+                         lambda b_, k_, g_, r_, ci: (b_, k_, g_, 0)),
+            # channel gather: DMA one embedding-indexed row per step
+            pl.BlockSpec((1, 1, 1, s),
+                         lambda b_, k_, g_, r_, ci:
+                         (b_, k_, ci[b_, k_, g_, r_], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, s),
+                               lambda b_, k_, g_, r_, ci: (b_, k_, g_, 0)),
+        scratch_shapes=[pltpu.VMEM((1, s), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, s), jnp.float32),
+        interpret=interpret,
+    )(chan_idx, q_r, k_embed)
+
+
+# ----------------------------------------------------------------------------
+# kernel 2: exact attention over the selected tokens (page fetch + filter)
+# ----------------------------------------------------------------------------
+
+def _selected_kernel(pidx_ref, slot_ref, valid_ref, q_ref, k_ref, v_ref,
+                     o_ref, m_ref, l_ref, acc_s, m_s, l_s, *, ksel, page):
+    si = pl.program_id(3)
+
+    @pl.when(si == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [1, hd]
+    kpage = k_ref[0, 0, 0].astype(jnp.float32)        # [page, hd]
+    vpage = v_ref[0, 0, 0].astype(jnp.float32)
+    hd = q.shape[-1]
+    slot = slot_ref[pl.program_id(0), pl.program_id(1), pl.program_id(2), si]
+    ok = valid_ref[pl.program_id(0), pl.program_id(1), pl.program_id(2), si]
+    # NFC filter: only the selected slot of the fetched page survives
+    srow = jax.lax.dot_general(q, kpage, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)[0]
+    logit = jnp.where(ok != 0, srow[slot] / np.sqrt(hd), NEG_INF)
+    vtok = vpage[slot][None, :]                        # [1, hd]
+    m_prev = m_s[0, 0]
+    m_new = jnp.maximum(m_prev, logit)
+    p = jnp.where(ok != 0, jnp.exp(logit - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + p
+    acc_s[...] = acc_s[...] * corr + p * vtok
+    m_s[0, 0] = m_new
+
+    @pl.when(si == ksel - 1)
+    def _finalize():
+        o_ref[0, 0, 0] = acc_s[0]
+        m_ref[0, 0, 0] = m_s[0, 0]
+        l_ref[0, 0, 0] = l_s[0, 0]
+
+
+def selected_attention(q, k_pages, v_pages, block_table, tok_idx, sel_valid,
+                       *, interpret=True):
+    """q: [B,KV,G,hd]; k_pages/v_pages: [B,KV,P,page,hd];
+    block_table: [B,KV,P]; tok_idx: [B,KV,G,ksel]; sel_valid same bool.
+    Returns (num [B,KV,G,hd] f32 — UNNORMALIZED exp-weighted sum at max m,
+    m [B,KV,G], l [B,KV,G]) for the cross-worker flash combine."""
+    b, kv, g, hd = q.shape
+    _, _, n_pages, page, _ = k_pages.shape
+    ksel = tok_idx.shape[-1]
+    page_idx = (tok_idx // page).astype(jnp.int32)
+    slot_idx = (tok_idx % page).astype(jnp.int32)
+    valid = sel_valid.astype(jnp.int32)
+
+    kernel = functools.partial(_selected_kernel, ksel=ksel, page=page)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                 # page_idx, slot_idx, valid
+        grid=(b, kv, g, ksel),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda b_, k_, g_, s_, pi, sl, va:
+                         (b_, k_, g_, 0)),
+            # page fetch with FTL translation (note: pi already logical;
+            # block_table translation is folded in by the wrapper)
+            pl.BlockSpec((1, 1, 1, page, hd),
+                         lambda b_, k_, g_, s_, pi, sl, va:
+                         (b_, k_, pi[b_, k_, g_, s_], 0, 0)),
+            pl.BlockSpec((1, 1, 1, page, hd),
+                         lambda b_, k_, g_, s_, pi, sl, va:
+                         (b_, k_, pi[b_, k_, g_, s_], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda b_, k_, g_, s_, pi, sl, va: (b_, k_, g_, 0)),
+            pl.BlockSpec((1, 1, 1),
+                         lambda b_, k_, g_, s_, pi, sl, va: (b_, k_, g_)),
+            pl.BlockSpec((1, 1, 1),
+                         lambda b_, k_, g_, s_, pi, sl, va: (b_, k_, g_)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    # fold the FTL translation into the prefetched indices
+    phys_idx = jnp.take_along_axis(
+        jnp.broadcast_to(block_table[:, :, None], (b, kv, g, n_pages)),
+        page_idx, axis=-1).astype(jnp.int32)
+    num, m, l = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kv, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(phys_idx, slot_idx, valid, q, k_pages, v_pages)
+    return num, m, l

@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) cell on the
+production meshes (16x16 single-pod, 2x16x16 multi-pod), print
+memory_analysis / cost_analysis, and record roofline inputs (FLOPs, bytes,
+collective bytes parsed from the optimized HLO) as JSON under
+experiments/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--impl X]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, get_arch, list_archs
+from repro.core.paged_kv import make_layout
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_zoo import input_specs
+from repro.models.transformer import init_cache, init_params
+from repro.runtime.optimizer import default_opt_for
+from repro.runtime.train_state import init_train_state, make_train_step
+from repro.serving.decode import cache_shardings, make_prefill_step, make_serve_step
+from repro.sharding.params import params_shardings, state_shardings
+from repro.sharding.policy import mesh_axis_size, policy_for
+from repro.utils.hlo import collective_bytes, collective_counts, convert_bytes
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _sds_with_shardings(tree, shardings):
+    """abstract pytree + sharding pytree -> ShapeDtypeStructs w/ shardings."""
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        tree, shardings)
+
+
+def _abstract(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def build_cell(cfg, shape, mesh, impl=None):
+    """Returns (step_fn, abstract_args) for one (arch, shape, mesh) cell."""
+    pol = policy_for(cfg, mesh, shape)
+    if impl:
+        cfg = cfg.replace(attention_impl=impl)
+    n_workers = mesh_axis_size(mesh, "model")
+    key = jax.random.PRNGKey(0)
+
+    params_a = _abstract(lambda: init_params(cfg, key))
+    p_sh = params_shardings(pol, params_a)
+    batch_a = input_specs(cfg, shape)
+    bspec = pol.batch_spec
+    from jax.sharding import PartitionSpec as P
+
+    def batch_shard(a):
+        spec = P(*( (bspec,) + (None,) * (len(a.shape) - 1) ))
+        return pol.named(spec)
+
+    batch = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                       sharding=batch_shard(a)), batch_a)
+
+    if shape.mode == "train":
+        oc = default_opt_for(cfg)
+        state_a = _abstract(lambda: init_train_state(cfg, params_a, oc))
+        s_sh = state_shardings(pol, state_a)
+        state = _sds_with_shardings(state_a, s_sh)
+        step = make_train_step(cfg, pol, oc)
+        return step, (state, batch), pol
+
+    if shape.mode == "prefill":
+        params = _sds_with_shardings(params_a, p_sh)
+        step = make_prefill_step(
+            cfg, pol, make_layout(cfg, shape.seq_len, n_workers),
+            length=shape.seq_len)
+        return step, (params, batch), pol
+
+    # decode: cache of seq_len context + one new token
+    layout = make_layout(cfg, shape.seq_len, n_workers)
+    cache_a = _abstract(lambda: init_cache(
+        cfg, shape.global_batch, shape.seq_len, n_workers,
+        enc_len=cfg.frontend_len))
+    c_sh = cache_shardings(cfg, pol, layout)
+    cache = _sds_with_shardings(cache_a, c_sh)
+    params = _sds_with_shardings(params_a, p_sh)
+    step = make_serve_step(cfg, pol, layout)
+    # donate the cache: steady-state decode must be allocation-free, and an
+    # undonated cache costs a full KV copy per step (§Perf iteration 2)
+    step.donate_argnums = (1,)
+    return step, (params, cache, batch["token"]), pol
+
+
+def _cost_of(cfg, shape, mesh, impl):
+    """Lower+compile one configuration and return (flops, bytes, coll)."""
+    step, args, _ = build_cell(cfg, shape, mesh, impl=impl)
+    donate = getattr(step, "donate_argnums", ())
+    compiled = jax.jit(step, donate_argnums=donate).lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    return (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0),
+            coll.get("total", 0), convert_bytes(txt))
+
+
+def probe_cell(cfg, shape, mesh, impl):
+    """XLA cost_analysis counts while-loop bodies ONCE (verified), so the
+    scanned production program under-reports flops/bytes/collectives by the
+    trip count. Probe: compile the same cell UNROLLED at 1 and 2 periods
+    (single microbatch), extrapolate linearly:
+
+        total = fixed + delta * n_periods [ * n_microbatches for train ]
+
+    The optimizer term rides inside delta for train (counted n_mb times,
+    < 1% of fwd+bwd flops at seq 4096) — noted in EXPERIMENTS.md.
+    """
+    from repro.models.transformer import layer_period, n_periods as np_of
+    period = layer_period(cfg)
+    trips = np_of(cfg)
+    import dataclasses
+    mb = 1
+    shape_p = shape
+    if shape.mode == "train":
+        from repro.sharding.policy import data_size as ds_of
+        mb = max(cfg.num_microbatches, 1)
+        b_mb = max(shape.global_batch // mb, 1)
+        # per-microbatch probe batch, still sharded over data
+        shape_p = dataclasses.replace(shape, global_batch=b_mb)
+        mb = shape.global_batch // b_mb
+
+    # the probe must keep the PRODUCTION expert layout: the auto rule keys
+    # on total expert bytes, which a 1-2 layer probe would shrink below the
+    # grid-EP threshold (discovered in §Perf iteration 3)
+    prod_mode = policy_for(cfg, mesh, shape).moe_mode() \
+        if cfg.n_experts else "auto"
+
+    def probe_cfg(k):
+        kw = dict(n_layers=period * k, scan_layers=False,
+                  num_microbatches=1, ep_mode=prod_mode)
+        if cfg.family == "encdec":
+            # whisper: encoder/decoder have equal depth; scale together
+            kw["n_encoder_layers"] = (cfg.n_encoder_layers // trips) * k
+        return cfg.replace(**kw)
+
+    f1, b1, c1, v1 = _cost_of(probe_cfg(1), shape_p, mesh, impl)
+    f2, b2, c2, v2 = _cost_of(probe_cfg(2), shape_p, mesh, impl)
+    df, db, dc, dv = f2 - f1, b2 - b1, c2 - c1, v2 - v1
+    fixed = (f1 - df, b1 - db, c1 - dc, v1 - dv)
+    total = {
+        "flops_total": (fixed[0] + df * trips) * mb,
+        "bytes_total": (fixed[1] + db * trips) * mb,
+        "collective_bytes_total": (fixed[2] + dc * trips) * mb,
+        "convert_bytes_total": (fixed[3] + dv * trips) * mb,
+        "probe_trips": trips, "probe_microbatches": mb,
+    }
+    return total
+
+
+def _apply_overrides(cfg, overrides):
+    if not overrides:
+        return cfg
+    kw = {}
+    for kv in overrides:
+        k, v = kv.split("=", 1)
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            v = v.lower() in ("1", "true")
+        elif isinstance(cur, int):
+            v = int(v)
+        elif isinstance(cur, float):
+            v = float(v)
+        kw[k] = v
+    return cfg.replace(**kw)
+
+
+def run_cell(arch, shape_name, multi_pod=False, impl=None, verbose=True,
+             probe=False, overrides=None, tag_suffix=""):
+    cfg = _apply_overrides(get_arch(arch), overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    step, args, pol = build_cell(cfg, shape, mesh, impl=impl)
+    donate = getattr(step, "donate_argnums", ())
+    lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    counts = collective_counts(hlo)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "impl": impl or cfg.attention_impl,
+        "n_devices": mesh.devices.size,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops": cost.get("flops", 0.0) if cost else 0.0,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else 0.0,
+        "collective_bytes": coll, "collective_counts": counts,
+        "memory": {
+            k: getattr(mem, k, None) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+        } if mem is not None else {},
+        "model_flops_per_token": 6 * cfg.active_param_count(),
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    if probe:
+        t0 = time.time()
+        rec.update(probe_cell(cfg.replace(attention_impl=rec["impl"]),
+                              shape, mesh, impl))
+        rec["probe_s"] = round(time.time() - t0, 2)
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']} "
+              f"impl={rec['impl']}: lower {t_lower:.1f}s compile "
+              f"{t_compile:.1f}s")
+        print(f"  memory_analysis: {rec['memory']}")
+        print(f"  cost_analysis: flops={rec['flops']:.3e} "
+              f"bytes={rec['bytes_accessed']:.3e}")
+        print(f"  collectives: {coll}")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    tag = (f"{arch}_{shape_name}_{rec['mesh']}" + (f"_{impl}" if impl else "")
+           + tag_suffix)
+    with open(os.path.join(OUT_DIR, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def cells():
+    for arch in list_archs():
+        if arch == "opt13b":
+            continue                      # paper model: separate bench
+        for shape_name in ("train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"):
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--impl", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="also extrapolate true per-step costs (unrolled "
+                         "1/2-period probes)")
+    ap.add_argument("--continue-on-error", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (perf iterations)")
+    ap.add_argument("--tag", default="", help="suffix for the output JSON")
+    args = ap.parse_args()
+
+    todo = list(cells()) if args.all else [(args.arch, args.shape)]
+    failures = []
+    for arch, shape_name in todo:
+        try:
+            run_cell(arch, shape_name, multi_pod=args.multipod,
+                     impl=args.impl, probe=args.probe,
+                     overrides=getattr(args, "set"), tag_suffix=args.tag)
+        except Exception as e:
+            failures.append((arch, shape_name, repr(e)))
+            print(f"[dryrun] FAIL {arch} x {shape_name}: {e}",
+                  file=sys.stderr)
+            traceback.print_exc()
+            if not args.continue_on_error:
+                raise
+    if failures:
+        print(f"[dryrun] {len(failures)} failures:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print(f"[dryrun] all {len(todo)} cells passed")
+
+
+if __name__ == "__main__":
+    main()

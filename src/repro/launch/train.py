@@ -1,0 +1,90 @@
+"""Training launcher: mesh bring-up, sharded state init, checkpoint/resume,
+straggler watchdog, elastic restart hooks.
+
+    PYTHONPATH=src python -m repro.launch.train --arch minitron-8b --smoke \
+        --steps 20 --batch 8 --seq 64 --ckpt /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ShapeConfig, get_arch
+from repro.models.model_zoo import init_params
+from repro.runtime import checkpoint as ckpt_mod
+from repro.runtime.data import DataConfig, batch_at, frontend_stub
+from repro.runtime.elastic import StepWatchdog, viable_mesh
+from repro.runtime.optimizer import OptConfig, default_opt_for
+from repro.runtime.train_state import init_train_state, make_train_step
+from repro.sharding.params import state_shardings
+from repro.sharding.policy import NULL, policy_for
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, smoke=args.smoke)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    if args.model_parallel > 1:
+        mesh = viable_mesh(jax.devices(), args.model_parallel)
+        pol = policy_for(cfg, mesh, shape)
+        print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    else:
+        pol = NULL
+
+    oc = default_opt_for(cfg)
+    oc = OptConfig(name=oc.name, lr=1e-3, warmup_steps=5,
+                   total_steps=args.steps, moment_dtype=oc.moment_dtype)
+    key = jax.random.PRNGKey(0)
+    state = init_train_state(cfg, init_params(cfg, key), oc,
+                             compress=args.compress_grads)
+    start = 0
+    if args.ckpt:
+        last = ckpt_mod.latest_step(args.ckpt)
+        if last is not None:
+            shardings = (state_shardings(pol, state)
+                         if pol is not NULL else None)
+            state = ckpt_mod.restore(args.ckpt, last, state, shardings)
+            start = int(state["step"])
+            print(f"resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, pol, oc,
+                                      compress=args.compress_grads))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch)
+    wd = StepWatchdog()
+    for i in range(start, args.steps):
+        batch = batch_at(dc, i)
+        if cfg.frontend == "audio":
+            batch["frames"] = frontend_stub(dc, cfg, i)
+        if cfg.frontend == "vision":
+            batch["patches"] = frontend_stub(dc, cfg, i)
+        wd.start()
+        state, metrics = step_fn(state, batch)
+        straggle = wd.stop()
+        print(f"step {i}: loss={float(metrics['loss']):.4f} "
+              f"gnorm={float(metrics['grad_norm']):.3f}"
+              + (" [straggler]" if straggle else ""))
+        if args.ckpt and (i + 1) % args.ckpt_every == 0:
+            ckpt_mod.save(args.ckpt, int(state["step"]), state, keep=3)
+    if args.ckpt:
+        ckpt_mod.save(args.ckpt, int(state["step"]), state, keep=3)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,251 @@
+"""Shared model building blocks: norms, RoPE, GQA attention (chunked
+flash-style for long prefill), swiglu MLP, embeddings.
+
+Parameters are plain dict pytrees. Layer-stacked variants (leading [L] dim)
+are produced by vmapping the per-layer init over split keys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+
+def _init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def stack_init(per_layer_init, key, n_layers):
+    """vmap a per-layer init over split keys -> stacked [L, ...] pytree."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(per_layer_init)(keys)
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+
+def norm_init(key, d, kind, dtype):
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def apply_norm(p, x, kind, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] int32 (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))           # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_at(position, d: int):
+    """Sinusoidal embedding for a single (traced) position -> [d]."""
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = position.astype(jnp.float32) / jnp.power(10000.0, dim / d)
+    out = jnp.zeros((d,), jnp.float32)
+    return out.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+
+
+def sinusoid_positions(max_len: int, d: int):
+    """Whisper-style sinusoidal absolute positions (extendable)."""
+    pos = np.arange(max_len)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / d)
+    out = np.zeros((max_len, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+# ----------------------------------------------------------------------------
+# attention (full-sequence, chunked flash-style in pure jnp)
+# ----------------------------------------------------------------------------
+
+def attn_init(key, d, n_heads, n_kv, head_dim, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": _init(kq, (d, n_heads, head_dim), dtype),
+        "wk": _init(kk, (d, n_kv, head_dim), dtype),
+        "wv": _init(kv, (d, n_kv, head_dim), dtype),
+        "wo": _init(ko, (n_heads, head_dim, d), dtype,
+                    scale=1.0 / np.sqrt(n_heads * head_dim)),
+    }
+
+
+def qkv_proj(p, x):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    return q, k, v
+
+
+def o_proj(p, attn_out):
+    return jnp.einsum("bshk,hkd->bsd", attn_out, p["wo"])
+
+
+def _expand_kv(k, n_heads):
+    """[B,S,KV,hd] -> [B,S,H,hd] by repeating groups (GQA)."""
+    b, s, kv, hd = k.shape
+    g = n_heads // kv
+    return jnp.repeat(k, g, axis=2) if g > 1 else k
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
+                      k_chunk: int = 1024, q_offset: int = 0):
+    """Flash-style online-softmax attention in pure jnp.
+
+    q: [B, Sq, H, hd]; k, v: [B, Sk, H, hd] (already GQA-expanded).
+    Memory is bounded by q_chunk*k_chunk score tiles. Doubles as the oracle
+    for kernels/flash_attention.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    # pad to chunk multiples
+    pq = (-sq) % q_chunk
+    pk = (-sk) % k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // q_chunk, kp.shape[1] // k_chunk
+    qp = qp.reshape(b, nq, q_chunk, h, hd)
+    kp = kp.reshape(b, nk, k_chunk, h, hd)
+    vp = vp.reshape(b, nk, k_chunk, h, hd)
+    scale = 1.0 / np.sqrt(hd)
+
+    def q_step(_, qi):
+        qblk, qidx = qi                                   # [B,qc,H,hd], scalar
+        qpos = q_offset + qidx * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            kpos = kidx * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("bqhk,bchk->bqhc", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            mask = (kpos < sk)[None, None, None, :]       # [1,1,1,c]
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])[None, :, None, :]
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask, p, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isinf(m), 0.0, m) - m_safe)
+            corr = jnp.where(jnp.isinf(m), 0.0, corr)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqhc,bchk->bqhk", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, q_chunk, h), -jnp.inf, jnp.float32),
+                jnp.zeros((b, q_chunk, h), jnp.float32),
+                jnp.zeros((b, q_chunk, h, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (kp.transpose(1, 0, 2, 3, 4), vp.transpose(1, 0, 2, 3, 4),
+             jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(
+        q_step, None, (qp.transpose(1, 0, 2, 3, 4), jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * q_chunk, h, hd)
+    return out[:, :sq]
+
+
+def full_attention(q, k, v, n_heads, *, causal=True, q_offset=0,
+                   q_chunk=512, k_chunk=1024):
+    k = _expand_kv(k, n_heads)
+    v = _expand_kv(v, n_heads)
+    return chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                             q_chunk=q_chunk, k_chunk=k_chunk)
+
+
+# ----------------------------------------------------------------------------
+# MLP (swiglu)
+# ----------------------------------------------------------------------------
+
+def mlp_init(key, d, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(k1, (d, d_ff), dtype),
+        "w_up": _init(k2, (d, d_ff), dtype),
+        "w_down": _init(k3, (d_ff, d), dtype),
+    }
+
+
+def apply_mlp(p, x, pol=None):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    if pol is not None:
+        h = pol.c(h, _ff_spec(pol))
+    return h @ p["w_down"]
+
+
+def _ff_spec(pol):
+    try:
+        from jax.sharding import PartitionSpec as P
+        if pol.w_ff_in() is None:
+            return None
+        shard = pol.w_ff_in()[1]
+        return P(pol.batch_spec, None, shard)
+    except Exception:
+        return None
+
+
+# ----------------------------------------------------------------------------
+# embeddings
+# ----------------------------------------------------------------------------
+
+def embed_init(key, vocab, d, dtype, tie=False):
+    k1, k2 = jax.random.split(key)
+    p = {"tok": _init(k1, (vocab, d), dtype, scale=0.02)}
+    if not tie:
+        p["unembed"] = _init(k2, (d, vocab), dtype)
+    return p
+
+
+def embed_tokens(p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(p, x):
+    if "unembed" in p:
+        return x @ p["unembed"]
+    return x @ p["tok"].T

@@ -1,0 +1,152 @@
+"""Mamba-1 selective-SSM block (falcon-mamba / jamba mamba layers).
+
+Train/prefill uses a chunked scan: sequential lax.scan over sequence chunks
+with an associative scan inside each chunk — bounded memory, log-depth
+within chunks, and the exact structure of kernels/mamba_scan.py.
+
+Decode carries (conv_state [B, conv, d_inner], ssm_state [B, d_inner, N]);
+the state is shard-resident over the `model` axis (d_inner sharded) and
+never crosses the interconnect — the SSM analogue of in-storage KV.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _init
+
+
+def mamba_init(key, d, d_inner, n_state, dt_rank, conv, dtype):
+    ks = jax.random.split(key, 7)
+    dt_init = jnp.exp(jax.random.uniform(ks[5], (d_inner,), jnp.float32)
+                      * (np.log(0.1) - np.log(0.001)) + np.log(0.001))
+    inv_softplus = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "in_proj": _init(ks[0], (d, 2 * d_inner), dtype),
+        "conv_w": _init(ks[1], (conv, d_inner), dtype, scale=1.0 / np.sqrt(conv)),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": _init(ks[2], (d_inner, dt_rank + 2 * n_state), dtype),
+        "dt_proj": _init(ks[3], (dt_rank, d_inner), dtype,
+                         scale=dt_rank ** -0.5),
+        "dt_bias": inv_softplus.astype(jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n_state + 1, dtype=jnp.float32), (d_inner, n_state))),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": _init(ks[4], (d_inner, d), dtype),
+    }
+
+
+def _ssm_inputs(p, xc, n_state, dt_rank):
+    """xc: [B, T, d_inner] (post-conv). Returns dt, B_t, C_t, A."""
+    dbc = jnp.einsum("btd,dr->btr", xc, p["x_proj"].astype(xc.dtype))
+    dt_low, b_t, c_t = jnp.split(dbc, [dt_rank, dt_rank + n_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt_low, p["dt_proj"].astype(xc.dtype))
+        .astype(jnp.float32) + p["dt_bias"])                 # [B,T,d_inner]
+    a = -jnp.exp(p["A_log"])                                 # [d_inner, N]
+    return dt, b_t.astype(jnp.float32), c_t.astype(jnp.float32), a
+
+
+def _chunk_scan(a_bar, bx, h0):
+    """Associative scan within a chunk. a_bar, bx: [B, T, d, N]; h0: [B, d, N].
+    Returns hs [B, T, d, N] and final h."""
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+    # fold h0 into the first element
+    bx = bx.at[:, 0].add(a_bar[:, 0] * h0)
+    a_s, hs = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+    return hs, hs[:, -1]
+
+
+def causal_conv(p, x, conv):
+    """Depthwise causal conv1d. x: [B, T, d_inner]."""
+    w = p["conv_w"].astype(x.dtype)                          # [conv, d]
+    xp = jnp.pad(x, ((0, 0), (conv - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(conv))
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def mamba_forward(cfg, p, x, chunk: int = 256):
+    """Full-sequence forward. x: [B, T, d] -> [B, T, d]."""
+    b, t, d = x.shape
+    n, dr, conv = cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)                        # [B,T,d_inner]
+    xc = jax.nn.silu(causal_conv(p, xi, conv))
+    dt, b_t, c_t, a = _ssm_inputs(p, xc, n, dr)
+    xf = xc.astype(jnp.float32)
+
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    def padt(v):
+        return jnp.pad(v, ((0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 2))
+    dtp, btp, ctp, xfp = padt(dt), padt(b_t), padt(c_t), padt(xf)
+    nchunk = (t + pad) // chunk
+
+    def step(h, args):
+        dt_c, b_c, c_c, x_c = args                           # [B,chunk,...]
+        a_bar = jnp.exp(dt_c[..., None] * a)                 # [B,c,d,N]
+        bx = (dt_c * x_c)[..., None] * b_c[:, :, None, :]    # [B,c,d,N]
+        hs, h_new = _chunk_scan(a_bar, bx, h)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, c_c)
+        return h_new, y
+
+    h0 = jnp.zeros((b, cfg.d_inner, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        tuple(v.reshape(b, nchunk, chunk, *v.shape[2:]).swapaxes(0, 1)
+              for v in (dtp, btp, ctp, xfp)))
+    y = ys.swapaxes(0, 1).reshape(b, nchunk * chunk, cfg.d_inner)[:, :t]
+    y = y + xf * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32)))
+    return jnp.einsum("bte,ed->btd", y.astype(x.dtype), p["out_proj"])
+
+
+def mamba_prefill(cfg, p, x, length=None, chunk: int = 256):
+    """Forward + final decode states (conv window + SSM state at `length`)."""
+    b, t, d = x.shape
+    out = mamba_forward(cfg, p, x, chunk)
+    # recompute states at position `length` (cheap relative to forward)
+    n, dr, conv = cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    xi, _ = jnp.split(xz, 2, axis=-1)
+    length = t if length is None else length
+    idx = jnp.maximum(jnp.arange(conv) + length - conv, 0)
+    conv_state = jnp.take(xi, idx, axis=1)                   # [B, conv, d_in]
+    xc = jax.nn.silu(causal_conv(p, xi, conv))
+    dt, b_t, c_t, a = _ssm_inputs(p, xc, n, dr)
+    mask = (jnp.arange(t) < length)[None, :, None]
+    dt = jnp.where(mask, dt, 0.0)                            # a_bar=1, bx=0
+    a_bar = jnp.exp(dt[..., None] * a)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * b_t[:, :, None, :]
+
+    def step(h, args):
+        ab, bx_t = args
+        return ab * h + bx_t, None
+    h, _ = jax.lax.scan(step, jnp.zeros((b, cfg.d_inner, n), jnp.float32),
+                        (a_bar.swapaxes(0, 1), bx.swapaxes(0, 1)))
+    return out, {"conv": conv_state, "ssm": h}
+
+
+def mamba_decode(cfg, p, x, state):
+    """One decode step. x: [B, 1, d]; state: {conv [B,conv,d_in], ssm [B,d_in,N]}."""
+    b = x.shape[0]
+    n, dr, conv = cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    xz = jnp.einsum("bd,de->be", x[:, 0], p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)                        # [B, d_inner]
+    conv_state = jnp.concatenate([state["conv"][:, 1:], xi[:, None]], axis=1)
+    w = p["conv_w"].astype(xi.dtype)
+    xc = jax.nn.silu(jnp.sum(conv_state * w[None], axis=1)
+                     + p["conv_b"].astype(xi.dtype))
+    dt, b_t, c_t, a = _ssm_inputs(p, xc[:, None], n, dr)
+    dt, b_t, c_t = dt[:, 0], b_t[:, 0], c_t[:, 0]
+    a_bar = jnp.exp(dt[..., None] * a)                       # [B,d,N]
+    h = a_bar * state["ssm"] + (dt * xc.astype(jnp.float32))[..., None] \
+        * b_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_t) + xc.astype(jnp.float32) * p["D"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("be,ed->bd", y.astype(x.dtype), p["out_proj"])
+    return out[:, None], {"conv": conv_state, "ssm": h}

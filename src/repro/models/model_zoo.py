@@ -1,0 +1,60 @@
+"""Model zoo: build any assigned architecture by name, init params, and
+produce ShapeDtypeStruct input specs for every (arch x input-shape) cell.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, get_arch
+from repro.models.transformer import forward, init_cache, init_params
+
+
+def build(name: str, smoke: bool = False) -> ModelConfig:
+    return get_arch(name, smoke=smoke)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a step function
+    (no device allocation) — the dry-run contract.
+
+    train/prefill: {"tokens": [B, S], (+frontend stub embeddings)}
+    decode       : {"token": [B, 1]} (the KV cache is a separate arg)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = cfg.activation_dtype
+    if shape.mode == "decode":
+        specs = {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+    else:
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape.mode == "train":
+            specs["targets"] = jax.ShapeDtypeStruct((b, s), i32)
+    if cfg.frontend == "audio" and shape.mode != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.frontend_len,
+                                                cfg.d_model), dt)
+    if cfg.frontend == "vision" and shape.mode != "decode":
+        specs["patches"] = jax.ShapeDtypeStruct((b, cfg.frontend_len,
+                                                 cfg.d_model), dt)
+    return specs
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeConfig, key) -> Dict[str, jax.Array]:
+    """Concrete random inputs matching input_specs (smoke tests/examples)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, spec in specs.items():
+        key, sub = jax.random.split(key)
+        if spec.dtype == jnp.int32:
+            out[name] = jax.random.randint(sub, spec.shape, 0,
+                                           cfg.vocab_size, jnp.int32)
+        else:
+            out[name] = (jax.random.normal(sub, spec.shape, jnp.float32)
+                         * 0.02).astype(spec.dtype)
+    return out
+
+
+__all__ = ["build", "forward", "init_params", "init_cache", "input_specs",
+           "make_inputs"]

@@ -1,0 +1,288 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with per-shard
+capacity, expert parallelism over the `model` mesh axis.
+
+Dispatch strategy (see DESIGN.md): routing runs inside a shard_map over
+(data, model). Each (data, model) cell routes its local tokens, builds a
+capacity buffer for *its own* expert shard only, runs the expert GeMMs, and
+scatters partial token outputs; a single psum over `model` combines — the
+EP collective cost is one activation-sized all-reduce per MoE layer, with
+no [T, E, C] one-hot dispatch tensor ever materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import _init
+from repro.sharding.policy import NullPolicy, data_axes
+
+
+def moe_init(key, d, d_ff, n_experts, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": _init(k1, (d, n_experts), jnp.float32, scale=0.02),
+        "w_gate": _init(k2, (n_experts, d, d_ff), dtype),
+        "w_up": _init(k3, (n_experts, d, d_ff), dtype),
+        "w_down": _init(k4, (n_experts, d_ff, d), dtype),
+    }
+
+
+def _route(x2d, router, k):
+    """x2d: [T, d] -> (gates [T,k], experts [T,k] int32, aux losses)."""
+    logits = x2d.astype(jnp.float32) @ router            # [T, E]
+    probs = jax.nn.softmax(logits, -1)
+    gates, experts = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style)
+    e = router.shape[-1]
+    me = jnp.mean(jax.nn.one_hot(experts[:, 0], e), axis=0)
+    ce = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(me * ce)
+    return gates, experts, aux
+
+
+def _capacity(t_tokens, n_experts, k, cf):
+    c = int(np.ceil(k * t_tokens / n_experts * cf))
+    return max(min(t_tokens, max(c, 4)), 1)
+
+
+def _expert_ffn(w_gate, w_up, w_down, xb):
+    """xb: [E_loc, C, d] -> [E_loc, C, d] (swiglu)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, w_gate))
+    h = h * jnp.einsum("ecd,edf->ecf", xb, w_up)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def _moe_local(router, wg, wu, wd, x2d, k, cf, e_start, n_experts):
+    """Route local tokens against the GLOBAL expert ids; compute only the
+    experts held locally in wg/wu/wd ([E_loc, ...], global range
+    [e_start, e_start + E_loc)). Returns the partial output [T, d]
+    (zeros for tokens routed to other shards) and the aux loss."""
+    t, d = x2d.shape
+    e_count = wg.shape[0]
+    gates, experts, aux = _route(x2d, router, k)
+    cap = _capacity(t, n_experts, k, cf)
+    flat_e = experts.reshape(-1)                          # [T*k]
+    flat_g = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    # position of each assignment within its expert's capacity buffer,
+    # via a stable sort (no [T*k, E] one-hot is ever materialized)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    first = jnp.searchsorted(se, se, side="left")
+    pos_sorted = jnp.arange(se.shape[0], dtype=jnp.int32) - first.astype(jnp.int32)
+    pos = jnp.zeros_like(flat_e).at[order].set(pos_sorted)  # [T*k]
+    local = (flat_e >= e_start) & (flat_e < e_start + e_count) & (pos < cap)
+    le = jnp.where(local, flat_e - e_start, 0).reshape(t, k)
+    lp = jnp.where(local, pos, cap).reshape(t, k)         # cap = dump slot
+    localk = local.reshape(t, k)
+    gk = flat_g.reshape(t, k)
+    # dispatch: [E_loc, cap+1, d]; loop over the k slots so no [T*k, d]
+    # intermediate is ever materialized
+    buf = jnp.zeros((e_count, cap + 1, d), x2d.dtype)
+    for j in range(k):
+        buf = buf.at[le[:, j], lp[:, j]].add(
+            jnp.where(localk[:, j, None], x2d, 0))
+    out_b = _expert_ffn(wg, wu, wd, buf[:, :cap])
+    # combine: gather each slot's expert output, weight, accumulate
+    out = jnp.zeros((t, d), x2d.dtype)
+    for j in range(k):
+        got = out_b[le[:, j], jnp.minimum(lp[:, j], cap - 1)]
+        out = out + jnp.where(localk[:, j, None],
+                              got * gk[:, j, None].astype(x2d.dtype), 0)
+    return out, aux
+
+
+# per-shard token threshold above which grid EP uses all-to-all dispatch
+A2A_MIN_TOKENS = 1024
+
+
+def _dsize(pol):
+    from repro.sharding.policy import data_size
+    return data_size(pol.mesh)
+
+
+def _positions_by(key_ids):
+    """Position of each element within its key's segment (stable sort)."""
+    order = jnp.argsort(key_ids, stable=True)
+    sk = key_ids[order]
+    first = jnp.searchsorted(sk, sk, side="left")
+    pos_sorted = jnp.arange(sk.shape[0], dtype=jnp.int32) - first.astype(jnp.int32)
+    return jnp.zeros_like(key_ids).at[order].set(pos_sorted)
+
+
+def _grid_a2a(pol, xl, router, wg, wu, wd, k, cf, e, e_loc, n_data, d):
+    """All-to-all grid-EP dispatch (runs inside shard_map over data x model).
+
+    1. route LOCAL tokens; destination shard of assignment = expert // e_loc
+    2. pack per-destination capacity buffers (x, expert id, token id, gate)
+    3. all_to_all over `data`: each cell receives its experts' tokens
+    4. local expert FFN via capacity buffers (f sharded over `model`)
+    5. all_to_all back; combine into local tokens; psum partials over model
+    """
+    bl, sl, _ = xl.shape
+    x2d = xl.reshape(-1, d)
+    t = x2d.shape[0]
+    d_idx = jax.lax.axis_index("data")
+    gates, experts, aux = _route(x2d, router, k)
+    flat_e = experts.reshape(-1)                    # [T*k]
+    flat_g = gates.reshape(-1).astype(x2d.dtype)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    dest = flat_e // e_loc                          # [T*k] in [0, n_data)
+    # a destination shard can receive up to t*k assignments (not t)
+    c_send = max(min(t * k, max(int(np.ceil(k * t / n_data * cf)), 4)), 1)
+    pos = _positions_by(dest)
+    ok = pos < c_send
+    dst = jnp.where(ok, dest, 0)
+    slot = jnp.where(ok, pos, c_send)
+    # pack: [n_data, c_send(+1 dump), d] + int meta (expert, token) + gate
+    xbuf = jnp.zeros((n_data, c_send + 1, d), x2d.dtype)
+    xbuf = xbuf.at[dst, slot].set(jnp.where(ok[:, None], x2d[flat_tok], 0))
+    meta_e = jnp.full((n_data, c_send + 1), -1, jnp.int32).at[dst, slot].set(
+        jnp.where(ok, flat_e, -1))
+    meta_g = jnp.zeros((n_data, c_send + 1), x2d.dtype).at[dst, slot].set(
+        jnp.where(ok, flat_g, 0))
+    # ---- dispatch over the wire ----
+    xr = jax.lax.all_to_all(xbuf[:, :c_send], "data", 0, 0, tiled=False)
+    er = jax.lax.all_to_all(meta_e[:, :c_send], "data", 0, 0, tiled=False)
+    # received: [n_src, c_send, ...] tokens destined to MY experts
+    xr2 = xr.reshape(-1, d)
+    er2 = er.reshape(-1)
+    le = jnp.where(er2 >= 0, er2 - d_idx * e_loc, 0)
+    cap_e = _capacity(xr2.shape[0], e_loc, 1, cf)
+    pe = _positions_by(jnp.where(er2 >= 0, le, e_loc))
+    ok_e = (er2 >= 0) & (pe < cap_e)
+    le_s = jnp.where(ok_e, le, 0)
+    pe_s = jnp.where(ok_e, pe, cap_e)
+    ebuf = jnp.zeros((e_loc, cap_e + 1, d), x2d.dtype)
+    ebuf = ebuf.at[le_s, pe_s].set(jnp.where(ok_e[:, None], xr2, 0))
+    out_b = _expert_ffn(wg, wu, wd, ebuf[:, :cap_e])
+    # scatter expert outputs back to received slots (f-partial over model)
+    yr2 = jnp.where(ok_e[:, None],
+                    out_b[le_s, jnp.minimum(pe_s, cap_e - 1)], 0)
+    yr = yr2.reshape(n_data, c_send, d)
+    # ---- return over the wire ----
+    yback = jax.lax.all_to_all(yr, "data", 0, 0, tiled=False)
+    ypad = jnp.concatenate(
+        [yback, jnp.zeros((n_data, 1, d), yback.dtype)], axis=1)
+    got = ypad[dst, jnp.where(ok, slot, c_send)]    # [T*k, d]
+    contrib = jnp.where(ok[:, None], got * meta_g[dst, slot][:, None], 0)
+    out = jnp.zeros((t, d), x2d.dtype).at[flat_tok].add(contrib)
+    out = jax.lax.psum(out, "model")                # f-contraction partials
+    aux = jax.lax.pmean(aux, ("data", "model"))
+    return out.reshape(bl, sl, d), aux
+
+
+def apply_moe(cfg, pol, p, x):
+    """x: [B, S, d] -> [B, S, d]. EP over the model axis when on-mesh."""
+    b, s, d = x.shape
+    e, k, cf = cfg.n_experts, cfg.experts_per_token, cfg.capacity_factor
+    if isinstance(pol, NullPolicy):
+        out, aux = _moe_local(p["router"], p["w_gate"], p["w_up"],
+                              p["w_down"], x.reshape(-1, d), k, cf, 0, e)
+        return out.reshape(b, s, d), aux
+
+    mesh = pol.mesh
+    mode = pol.moe_mode()
+    bspec = pol.batch_spec
+    if mode == "replicate":
+        out, aux = _moe_local(p["router"], p["w_gate"], p["w_up"],
+                              p["w_down"], x.reshape(-1, d), k, cf, 0, e)
+        return out.reshape(b, s, d), aux
+
+    if mode == "model":
+        n_model = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+        e_loc = e // n_model
+
+        def body(xl, router, wg, wu, wd):
+            bl, sl, _ = xl.shape
+            e_start = jax.lax.axis_index("model") * e_loc
+            out, aux = _moe_local(router, wg, wu, wd, xl.reshape(-1, d),
+                                  k, cf, e_start, e)
+            out = jax.lax.psum(out, "model")
+            aux = jax.lax.pmean(aux, "model")
+            return out.reshape(bl, sl, d), aux
+
+        # router replicated; expert weights sharded over model (EP)
+        out, aux = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(bspec, None, None), P(None, None),
+                      P("model", None, None), P("model", None, None),
+                      P("model", None, None)),
+            out_specs=(P(bspec, None, None), P()),
+            check_vma=False,
+        )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+        return out, aux
+
+    # ---- grid EP: experts over `data`, d_ff over `model` ----
+    # Each (data, model) cell holds [E/n_data, d, f/n_model] — the layout
+    # that makes the 1T-param MoEs fit per chip (DESIGN.md). Dispatch:
+    #   - decode / tiny T: all-gather tokens over `data` (cheap, lowest
+    #     latency), compute local experts, reduce-scatter back.
+    #   - train / prefill: ALL-TO-ALL dispatch — each cell sends each
+    #     assignment only to the data-shard owning its expert; bytes are
+    #     k*cf/n_data of the all-gather (§Perf iteration 7).
+    n_data = dict(zip(mesh.axis_names, mesh.devices.shape))["data"]
+    e_loc = e // n_data
+    data_in_batch = bspec is not None and "data" in (
+        bspec if isinstance(bspec, tuple) else (bspec,))
+    # dispatch-strategy cost model (§Perf iterations 7-8): a2a moves
+    # ~2*k*cf/n_data of the tokens (out + back); AG+reduce-scatter moves
+    # ~(1 + 1/n_data). Choose per-config: a2a wins for low-k MoEs (jamba
+    # top-2: 0.31x), AG wins for high-k (kimi top-8: 1.25x).
+    a2a_bytes = 2 * k * cf / n_data
+    use_a2a = (data_in_batch and (b // _dsize(pol) * s) >= A2A_MIN_TOKENS
+               and a2a_bytes < 1.0 + 1.0 / n_data)
+
+    if use_a2a:
+        def body_a2a(xl, router, wg, wu, wd):
+            out, aux = _grid_a2a(pol, xl, router, wg, wu, wd, k, cf,
+                                 e, e_loc, n_data, d)
+            return out, aux
+
+        out, aux = jax.shard_map(
+            body_a2a, mesh=mesh,
+            in_specs=(P(bspec, None, None), P(None, None),
+                      P("data", None, "model"), P("data", None, "model"),
+                      P("data", "model", None)),
+            out_specs=(P(bspec, None, None), P()),
+            check_vma=False,
+        )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+        return out, aux
+
+    def body_grid(xl, router, wg, wu, wd):
+        d_idx = jax.lax.axis_index("data")
+        if data_in_batch:
+            x_all = jax.lax.all_gather(xl, "data", tiled=True)
+        else:
+            x_all = xl
+        bl, sl, _ = x_all.shape
+        e_start = d_idx * e_loc
+        out, aux = _moe_local(router, wg, wu, wd, x_all.reshape(-1, d),
+                              k, cf, e_start, e)
+        out = out.reshape(bl, sl, d)
+        if data_in_batch:
+            # reduce-scatter: combine expert partials over `data` while
+            # returning each cell only its own rows (vs psum + slice:
+            # n_data x fewer collective bytes — §Perf iteration 2)
+            out = jax.lax.psum_scatter(out, "data", scatter_dimension=0,
+                                       tiled=True)
+        else:
+            out = jax.lax.psum(out, "data")
+        out = jax.lax.psum(out, "model")
+        aux = jax.lax.pmean(aux, ("data", "model"))
+        return out, aux
+
+    out, aux = jax.shard_map(
+        body_grid, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(None, None),
+                  P("data", None, "model"), P("data", None, "model"),
+                  P("data", "model", None)),
+        out_specs=(P(bspec, None, None), P()),
+        check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return out, aux

@@ -1,0 +1,420 @@
+"""Unified decoder model covering all assigned families:
+
+  dense / moe / vlm : homogeneous attention blocks (+ MLP or MoE FFN)
+  ssm               : mamba-only blocks (no FFN — mamba1)
+  hybrid (jamba)    : period-structured mix (1 attn per `attn_period`,
+                      MoE every `moe_every`)
+  encdec (whisper)  : encoder stack + decoder stack with cross-attention
+
+Layers are scanned over "periods" (period = lcm of the structural
+periodicities, 1 for homogeneous models) so the HLO stays one-period-sized
+regardless of depth — essential for 512-device compile times, and the
+layer-wise KV "transmission" pipeline falls out of the scan schedule.
+
+Modes:
+  train  : full-seq causal, next-token loss (+ MoE aux)
+  prefill: full-seq causal, returns logits + populated paged-KV cache
+  decode : one token against the cache through core.offload (the paper's
+           in-storage attention path)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.offload import decode_attention
+from repro.core.paged_kv import (KVLayout, append_token, init_layer_cache,
+                                 make_layout, write_prefill)
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (apply_mlp, apply_norm, apply_rope,
+                                 attn_init, embed_init, embed_tokens,
+                                 full_attention, mlp_init, norm_init, o_proj,
+                                 qkv_proj, sinusoid_at, sinusoid_positions,
+                                 stack_init, unembed, _init)
+from repro.sharding.policy import NullPolicy
+
+# ----------------------------------------------------------------------------
+# structure
+# ----------------------------------------------------------------------------
+
+def layer_period(cfg) -> int:
+    p = 1
+    if cfg.family == "hybrid" and cfg.attn_period:
+        p = cfg.attn_period
+    if cfg.n_experts and cfg.moe_every > 1:
+        p = int(np.lcm(p, cfg.moe_every))
+    return p
+
+
+def layer_kinds(cfg) -> Tuple[Tuple[str, str], ...]:
+    """(mixer, ffn) kind for each position within one period."""
+    period = layer_period(cfg)
+    kinds = []
+    for j in range(period):
+        if cfg.family == "ssm":
+            mixer = "mamba"
+        elif cfg.family == "hybrid":
+            mixer = "attn" if j % cfg.attn_period == cfg.attn_offset else "mamba"
+        else:
+            mixer = "attn"
+        if cfg.family == "ssm":
+            ffn = "none"                       # mamba1 block has no FFN
+        elif cfg.n_experts and j % cfg.moe_every == cfg.moe_every - 1:
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        kinds.append((mixer, ffn))
+    return tuple(kinds)
+
+
+def n_periods(cfg) -> int:
+    period = layer_period(cfg)
+    assert cfg.n_layers % period == 0, (cfg.name, cfg.n_layers, period)
+    return cfg.n_layers // period
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+
+def _block_init(cfg, kind, key, dtype, cross: bool = False):
+    mixer, ffn = kind
+    km, kf, kn1, kn2, kc, kn3 = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": norm_init(kn1, cfg.d_model, cfg.norm, dtype)}
+    if mixer == "attn":
+        p["attn"] = attn_init(km, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim, dtype)
+    else:
+        p["mamba"] = mamba_mod.mamba_init(
+            km, cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank,
+            cfg.ssm_conv, dtype)
+    if cross:
+        p["norm_cross"] = norm_init(kn3, cfg.d_model, cfg.norm, dtype)
+        p["cross"] = attn_init(kc, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, dtype)
+    if ffn == "mlp":
+        p["norm2"] = norm_init(kn2, cfg.d_model, cfg.norm, dtype)
+        p["mlp"] = mlp_init(kf, cfg.d_model, cfg.d_ff, dtype)
+    elif ffn == "moe":
+        p["norm2"] = norm_init(kn2, cfg.d_model, cfg.norm, dtype)
+        p["moe"] = moe_mod.moe_init(kf, cfg.d_model, cfg.d_ff,
+                                    cfg.n_experts, dtype)
+    return p
+
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    dtype = cfg.activation_dtype
+    kinds = layer_kinds(cfg)
+    np_ = n_periods(cfg)
+    ke, kb, kn, kenc, kfr = jax.random.split(key, 5)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ke, cfg.padded_vocab, cfg.d_model, dtype,
+                            tie=cfg.tie_embeddings),
+        "final_norm": norm_init(kn, cfg.d_model, cfg.norm, dtype),
+    }
+    cross = cfg.family == "encdec"
+    blocks = []
+    for j, kind in enumerate(kinds):
+        kj = jax.random.fold_in(kb, j)
+        blocks.append(stack_init(
+            lambda k, kind=kind: _block_init(cfg, kind, k, dtype, cross=cross),
+            kj, np_))
+    params["blocks"] = tuple(blocks)
+    if cfg.family == "encdec":
+        params["encoder"] = {
+            "blocks": stack_init(
+                lambda k: _block_init(cfg, ("attn", "mlp"), k, dtype),
+                kenc, cfg.n_encoder_layers),
+            "final_norm": norm_init(jax.random.fold_in(kenc, 1), cfg.d_model,
+                                    cfg.norm, dtype),
+        }
+    if cfg.frontend != "none":
+        params["frontend"] = {
+            "proj": _init(kfr, (cfg.d_model, cfg.d_model), dtype)}
+    return params
+
+
+# ----------------------------------------------------------------------------
+# cache
+# ----------------------------------------------------------------------------
+
+def make_layouts(cfg, max_seq: int, n_workers: int):
+    return make_layout(cfg, max_seq, n_workers)
+
+
+def init_cache(cfg, batch: int, max_seq: int, n_workers: int,
+               enc_len: int = 0):
+    """Decode cache pytree: tuple over period positions; each entry stacked
+    over periods. Attention -> paged KV store; mamba -> (conv, ssm) state."""
+    dtype = cfg.activation_dtype
+    layout = make_layout(cfg, max_seq, n_workers)
+    np_ = n_periods(cfg)
+    entries = []
+    for mixer, _ in layer_kinds(cfg):
+        if mixer == "attn":
+            one = init_layer_cache(layout, batch, cfg.kv_store_dtype)
+            entry = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (np_,) + a.shape), one)
+            if cfg.family == "encdec":
+                entry["cross_k"] = jnp.zeros(
+                    (np_, batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+                entry["cross_v"] = jnp.zeros_like(entry["cross_k"])
+        else:
+            entry = {
+                "conv": jnp.zeros((np_, batch, cfg.ssm_conv, cfg.d_inner),
+                                  dtype),
+                "ssm": jnp.zeros((np_, batch, cfg.d_inner, cfg.ssm_state),
+                                 jnp.float32),
+            }
+        entries.append(entry)
+    return {"layers": tuple(entries), "length": jnp.zeros((), jnp.int32)}
+
+
+# ----------------------------------------------------------------------------
+# sublayers
+# ----------------------------------------------------------------------------
+
+def _attn_full(cfg, pol, p, x, positions, causal=True, kv=None):
+    """Full-sequence attention. Returns (out, (k, v)) for cache writing."""
+    q, k, v = qkv_proj(p, x)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = pol.c(q, pol.acts(heads=True))
+    if kv is not None:                         # cross-attention
+        k, v = kv
+    out = full_attention(q, k, v, cfg.n_heads, causal=causal)
+    out = pol.c(out, pol.acts(heads=True))
+    return o_proj(p, out), (k, v)
+
+
+def _attn_decode(cfg, pol, layout, p, x, cache, length):
+    """Single-token attention through the in-storage engine."""
+    q, k, v = qkv_proj(p, x)                   # [B,1,H,hd], [B,1,KV,hd]
+    if cfg.rope:
+        pos = jnp.full((x.shape[0], 1), length, jnp.int32)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    cache = append_token(layout, cache, k[:, 0], v[:, 0], length)
+    out = decode_attention(cfg, pol, layout, q[:, 0], cache, length + 1)
+    return o_proj(p, out[:, None]), cache
+
+
+def _ffn(cfg, pol, p, x, kind):
+    if kind == "none":
+        return x, 0.0
+    h = apply_norm(p["norm2"], x, cfg.norm)
+    if kind == "moe":
+        out, aux = moe_mod.apply_moe(cfg, pol, p["moe"], h)
+        return x + out, aux
+    return x + apply_mlp(p["mlp"], h, pol), 0.0
+
+
+def _block_full(cfg, pol, kind, p, x, positions, mode, enc_out=None,
+                layout=None, length=None):
+    """One block, full-sequence (train/prefill). Returns (x, aux, cache)."""
+    mixer, ffn = kind
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    cache_entry = None
+    if mixer == "attn":
+        out, (k, v) = _attn_full(cfg, pol, p["attn"], h, positions)
+        x = x + out
+        if mode == "prefill":
+            one = init_layer_cache(layout, x.shape[0],
+                                    cfg.kv_store_dtype)
+            cache_entry = write_prefill(layout, one, k, v, lengths=length)
+        if enc_out is not None:                # whisper cross-attention
+            hc = apply_norm(p["norm_cross"], x, cfg.norm)
+            qc, kc, vc = qkv_proj(p["cross"], hc)
+            kc = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"])
+            vc = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"])
+            outc = full_attention(qc, kc, vc, cfg.n_heads, causal=False)
+            x = x + o_proj(p["cross"], outc)
+            if mode == "prefill":
+                cache_entry["cross_k"] = kc
+                cache_entry["cross_v"] = vc
+    else:
+        if mode == "prefill":
+            out, st = mamba_mod.mamba_prefill(cfg, p["mamba"], h,
+                                              length=length)
+            cache_entry = st
+        else:
+            out = mamba_mod.mamba_forward(cfg, p["mamba"], h)
+        x = x + out
+    x, aux = _ffn(cfg, pol, p, x, ffn)
+    return x, aux, cache_entry
+
+
+def _block_decode(cfg, pol, kind, p, x, cache, length, layout):
+    mixer, ffn = kind
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if mixer == "attn":
+        out, new_cache = _attn_decode(cfg, pol, layout, p["attn"], h,
+                                      {k: v for k, v in cache.items()
+                                       if not k.startswith("cross_")},
+                                      length)
+        if "cross_k" in cache:
+            new_cache = dict(new_cache)
+            new_cache["cross_k"] = cache["cross_k"]
+            new_cache["cross_v"] = cache["cross_v"]
+        x = x + out
+        if "cross_k" in cache:
+            hc = apply_norm(p["norm_cross"], x, cfg.norm)
+            qc = jnp.einsum("bsd,dhk->bshk", hc, p["cross"]["wq"])
+            outc = full_attention(qc, cache["cross_k"], cache["cross_v"],
+                                  cfg.n_heads, causal=False)
+            x = x + o_proj(p["cross"], outc)
+    else:
+        out, new_cache = mamba_mod.mamba_decode(cfg, p["mamba"], h, cache)
+        x = x + out
+    x, aux = _ffn(cfg, pol, p, x, ffn)
+    return x, new_cache
+
+
+# ----------------------------------------------------------------------------
+# stacks
+# ----------------------------------------------------------------------------
+
+def _run_encoder(cfg, pol, params, frames):
+    """Whisper encoder: frames [B, F, d] (frontend stub output)."""
+    enc = params["encoder"]
+    x = frames @ params["frontend"]["proj"]
+    pos = sinusoid_positions(frames.shape[1], cfg.d_model).astype(x.dtype)
+    x = x + pos[None]
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1]),
+                                 frames.shape[:2])
+
+    def body(x, p):
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        out, _ = _attn_full(cfg, pol, p["attn"], h, positions, causal=False)
+        x = x + out
+        x, _ = _ffn(cfg, pol, p, x, "mlp")
+        return x, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda c, p: body(c, p), x, enc["blocks"])
+    else:
+        for i in range(cfg.n_encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], enc["blocks"]))
+    return apply_norm(enc["final_norm"], x, cfg.norm)
+
+
+def _embed_input(cfg, pol, params, batch, mode, length=None):
+    tokens = batch["token"] if mode == "decode" else batch["tokens"]
+    x = embed_tokens(params["embed"], tokens)
+    if not cfg.rope:
+        s = tokens.shape[1]
+        if mode == "decode":
+            pos_emb = sinusoid_at(jnp.asarray(length), cfg.d_model)
+            x = x + pos_emb.astype(x.dtype)[None, None, :]
+        else:
+            x = x + sinusoid_positions(s, cfg.d_model).astype(x.dtype)[None]
+    if cfg.frontend == "vision" and mode != "decode" and "patches" in batch:
+        patches = batch["patches"] @ params["frontend"]["proj"]
+        n = patches.shape[1]
+        x = jnp.concatenate([patches.astype(x.dtype), x[:, n:]], axis=1)
+    return pol.c(x, pol.acts())
+
+
+def forward(cfg, pol, params, batch, mode: str, cache=None,
+            layout: Optional[KVLayout] = None, length=None):
+    """Returns (logits, aux, cache)."""
+    kinds = layer_kinds(cfg)
+    np_ = n_periods(cfg)
+    if layout is None:
+        n_workers = 1 if isinstance(pol, NullPolicy) else \
+            dict(zip(pol.mesh.axis_names, pol.mesh.devices.shape)).get("model", 1)
+        seq = cfg.max_seq if mode == "decode" else batch["tokens"].shape[1]
+        layout = make_layout(cfg, seq, n_workers)
+
+    enc_out = None
+    if cfg.family == "encdec" and mode != "decode":
+        enc_out = _run_encoder(cfg, pol, params, batch["frames"])
+
+    if mode == "decode":
+        length = cache["length"]
+        x = _embed_input(cfg, pol, params, batch, mode, length=length)
+
+        def body(x, xs):
+            block_p, cache_p = xs
+            outs = []
+            for j, kind in enumerate(kinds):
+                pj = jax.tree.map(lambda a: a, block_p[j])
+                x, new_c = _block_decode(cfg, pol, kind, pj, x, cache_p[j],
+                                         length, layout)
+                outs.append(new_c)
+            return x, tuple(outs)
+
+        if cfg.scan_layers:
+            x, new_layers = jax.lax.scan(
+                body, x, (params["blocks"], cache["layers"]))
+        else:
+            new_entries = [[] for _ in kinds]
+            for i in range(np_):
+                blk = jax.tree.map(lambda a: a[i], params["blocks"])
+                cch = jax.tree.map(lambda a: a[i], cache["layers"])
+                x, outs = body(x, (blk, cch))
+                for j, o in enumerate(outs):
+                    new_entries[j].append(o)
+            new_layers = tuple(
+                jax.tree.map(lambda *xs: jnp.stack(xs), *e)
+                for e in new_entries)
+        new_cache = {"layers": new_layers, "length": length + 1}
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        logits = unembed(params["embed"], x)
+        logits = pol.c(logits, pol.logits())
+        return logits, 0.0, new_cache
+
+    # ---- train / prefill ----
+    x = _embed_input(cfg, pol, params, batch, mode)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(carry, block_p):
+        x, aux = carry
+        caches = []
+        for j, kind in enumerate(kinds):
+            x, a, c = _block_full(cfg, pol, kind, block_p[j], x, positions,
+                                  mode, enc_out=enc_out, layout=layout,
+                                  length=length)
+            aux = aux + a
+            caches.append(c)
+        x = pol.c(x, pol.acts())
+        return (x, aux), tuple(caches) if mode == "prefill" else None
+
+    body_fn = body
+    if cfg.remat and mode == "train":
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat_policy == "full" else
+                  jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body_fn = jax.checkpoint(body, policy=policy)
+
+    if cfg.scan_layers:
+        (x, aux), caches = jax.lax.scan(body_fn, (x, 0.0), params["blocks"])
+    else:
+        aux = 0.0
+        cache_entries = [[] for _ in kinds]
+        for i in range(np_):
+            blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            (x, aux), cs = body_fn((x, aux), blk)
+            if mode == "prefill":
+                for j, c in enumerate(cs):
+                    cache_entries[j].append(c)
+        caches = tuple(
+            jax.tree.map(lambda *xs: jnp.stack(xs), *e)
+            for e in cache_entries) if mode == "prefill" else None
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x)
+    logits = pol.c(logits, pol.logits())
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"layers": caches,
+                     "length": jnp.asarray(
+                         length if length is not None else x.shape[1],
+                         jnp.int32)}
+    return logits, aux, new_cache

@@ -1,0 +1,82 @@
+"""Elastic scaling & fault handling.
+
+On node loss the launcher (launch/train.py) calls `remesh`: build the
+largest valid mesh from the surviving devices, rebuild the sharding policy,
+and restore the last checkpoint directly onto the new shardings. Data
+addressing is stateless (runtime/data.py) so no batches are lost or
+replayed. Straggler mitigation: `StepWatchdog` flags steps exceeding
+k x median; the launcher responds by checkpoint+remesh (the TPU-pod
+equivalent of hot-sparing a slow host).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.runtime import checkpoint as ckpt_mod
+
+
+def viable_mesh(devices: Sequence, model_parallelism: int,
+                axis_names=("data", "model")) -> Mesh:
+    """Largest (data, model) mesh from the surviving devices: model axis is
+    fixed (TP degree is a property of the model layout), data axis shrinks
+    to the largest multiple that fits."""
+    n = len(devices)
+    if n < model_parallelism:
+        raise RuntimeError(
+            f"only {n} devices left; need >= model_parallelism="
+            f"{model_parallelism}")
+    data = n // model_parallelism
+    use = data * model_parallelism
+    dev = np.asarray(devices[:use]).reshape(data, model_parallelism)
+    return Mesh(dev, axis_names)
+
+
+def remesh_and_restore(ckpt_dir: str, like_state, new_mesh: Mesh,
+                       sharding_fn) -> tuple:
+    """Restore the latest checkpoint resharded for `new_mesh`.
+    sharding_fn(mesh, like_state) -> pytree of NamedSharding."""
+    step = ckpt_mod.latest_step(ckpt_dir)
+    if step is None:
+        raise RuntimeError(f"no checkpoint in {ckpt_dir}")
+    shardings = sharding_fn(new_mesh, like_state)
+    state = ckpt_mod.restore(ckpt_dir, step, like_state, shardings)
+    return state, step
+
+
+@dataclass
+class StepWatchdog:
+    """Flags straggling steps (> factor x rolling median)."""
+    factor: float = 3.0
+    window: int = 32
+    history: List[float] = field(default_factory=list)
+    _t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self) -> bool:
+        """Returns True if this step straggled."""
+        dt = time.monotonic() - self._t0
+        straggled = False
+        if len(self.history) >= 8:
+            med = float(np.median(self.history[-self.window:]))
+            straggled = dt > self.factor * med
+        self.history.append(dt)
+        return straggled
+
+
+@dataclass
+class FailureSimulator:
+    """Deterministic fault injection for integration tests: kills a
+    configured set of 'hosts' (device groups) at given steps."""
+    fail_at: dict = field(default_factory=dict)   # step -> n_devices_lost
+
+    def surviving(self, devices, step: int):
+        lost = sum(v for s, v in self.fail_at.items() if s <= step)
+        return devices[:max(len(devices) - lost, 1)]

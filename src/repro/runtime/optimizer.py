@@ -1,0 +1,165 @@
+"""Optimizers (no external deps): AdamW and Adafactor, with cosine LR
+schedule and global-norm clipping.
+
+Adafactor (factored second moment, optional first moment) is the default
+for the >=300B architectures: optimizer state is ~O(sqrt) of param count,
+which is what makes the 1T-param configs representable per-chip (see
+EXPERIMENTS.md §Dry-run memory notes).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"              # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"    # bf16 halves optimizer HBM
+
+
+def lr_at(oc: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = oc.lr * (step + 1) / max(oc.warmup_steps, 1)
+    t = jnp.clip((step - oc.warmup_steps)
+                 / max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * oc.lr * (1 + jnp.cos(np.pi * t))
+    return jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+# ----------------------------------------------------------------------------
+# AdamW
+# ----------------------------------------------------------------------------
+
+def adamw_init(oc: OptConfig, params):
+    dt = jnp.dtype(oc.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(oc: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_at(oc, step)
+    grads, gnorm = clip_by_global_norm(grads, oc.clip_norm)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - oc.b1 ** t
+    bc2 = 1 - oc.b2 ** t
+
+    def upd(g, m, v, p):
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = oc.b1 * m32 + (1 - oc.b1) * g
+        v_new = oc.b2 * v32 + (1 - oc.b2) * jnp.square(g)
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + oc.eps)
+        update = update + oc.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * update
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    outs = [upd(g, m, v, p)
+            for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+
+# ----------------------------------------------------------------------------
+# Adafactor (factored V, no first moment)
+# ----------------------------------------------------------------------------
+
+def _factored(shape):
+    return len(shape) >= 2
+
+
+def adafactor_init(oc: OptConfig, params):
+    def init(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(init, params,
+                              is_leaf=lambda x: isinstance(x, jax.Array)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(oc: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_at(oc, step)
+    grads, gnorm = clip_by_global_norm(grads, oc.clip_norm)
+    beta2 = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, v, p):
+        g2 = jnp.square(g) + 1e-30
+        if _factored(p.shape):
+            vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)
+                                   [..., None], 1e-30))
+            update = g * jax.lax.rsqrt(denom + 1e-30)
+            v_new = {"vr": vr, "vc": vc}
+        else:
+            vv = beta2 * v["v"] + (1 - beta2) * g2
+            update = g * jax.lax.rsqrt(vv + 1e-30)
+            v_new = {"v": vv}
+        # update clipping (Adafactor RMS rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        update = update + oc.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * update
+        return p_new.astype(p.dtype), v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_v = tdef.flatten_up_to(state["v"])
+    outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_v = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return new_params, {"v": new_v, "step": step}, gnorm
+
+
+def make_optimizer(oc: OptConfig):
+    if oc.name == "adamw":
+        return functools.partial(adamw_init, oc), functools.partial(adamw_update, oc)
+    if oc.name == "adafactor":
+        return (functools.partial(adafactor_init, oc),
+                functools.partial(adafactor_update, oc))
+    raise ValueError(oc.name)
+
+
+def default_opt_for(cfg) -> OptConfig:
+    big = cfg.param_count() > 100e9
+    return OptConfig(name="adafactor" if big else "adamw",
+                     moment_dtype="bfloat16" if cfg.param_count() > 10e9
+                     else "float32")

@@ -1,0 +1,102 @@
+"""Train state + train_step factory: next-token loss, gradient accumulation
+over microbatches (lax.scan), optional EF-int8 gradient compression, AdamW /
+Adafactor update. Built to be jit-lowered with ShapeDtypeStructs (dry-run)
+or executed on real arrays (examples, smoke tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import forward
+from repro.runtime import compress as compress_mod
+from repro.runtime.optimizer import OptConfig, make_optimizer
+
+AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits, targets, vocab_size):
+    """Masked CE. targets: int32 [B,S]; ids >= vocab_size or < 0 ignored."""
+    valid = (targets >= 0) & (targets < vocab_size)
+    tsafe = jnp.where(valid, targets, 0)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tsafe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - gold, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def init_train_state(cfg, params, oc: OptConfig, compress: bool = False):
+    init_fn, _ = make_optimizer(oc)
+    state = {"params": params, "opt": init_fn(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if compress:
+        state["err"] = compress_mod.init_error(params)
+    return state
+
+
+def make_train_step(cfg, pol, oc: OptConfig, compress: bool = False,
+                    accum_dtype=None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    _, update_fn = make_optimizer(oc)
+    n_mb_req = max(cfg.num_microbatches, 1)
+
+    def _n_mb(global_batch: int) -> int:
+        """Largest feasible microbatch count <= requested: each microbatch
+        must still shard over the data axes."""
+        from repro.sharding.policy import NullPolicy, data_size
+        dsize = 1 if isinstance(pol, NullPolicy) else data_size(pol.mesh)
+        cap = max(global_batch // max(dsize, 1), 1)
+        n = min(n_mb_req, cap)
+        while global_batch % n or (global_batch // n) % min(dsize, global_batch):
+            n -= 1
+        return max(n, 1)
+
+    def loss_fn(params, mb):
+        logits, aux, _ = forward(cfg, pol, params, mb, "train")
+        ce = cross_entropy(logits, mb["targets"], cfg.vocab_size)
+        return ce + AUX_WEIGHT * aux, (ce, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        adt = accum_dtype or (jnp.bfloat16 if cfg.param_count() > 100e9
+                              else jnp.float32)
+        n_mb = _n_mb(batch["tokens"].shape[0])
+
+        if n_mb == 1:
+            (loss, (ce, aux)), grads = grad_fn(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda a: a.reshape((n_mb, a.shape[0] // n_mb) + a.shape[1:]),
+                batch)
+
+            def mb_step(acc, mb):
+                (l, (c, a)), g = grad_fn(params, mb)
+                acc_g, acc_l, acc_c, acc_a = acc
+                acc_g = jax.tree.map(
+                    lambda x, y: x + y.astype(x.dtype), acc_g, g)
+                return (acc_g, acc_l + l, acc_c + c, acc_a + a), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            (gsum, lsum, csum, asum), _ = jax.lax.scan(
+                mb_step, (zero_g, 0.0, 0.0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: (g / n_mb).astype(jnp.float32),
+                                 gsum)
+            loss, ce, aux = lsum / n_mb, csum / n_mb, asum / n_mb
+
+        new_state = dict(state)
+        if compress:
+            grads, new_state["err"] = compress_mod.compress_grads(
+                grads, state["err"])
+        new_params, new_opt, gnorm = update_fn(grads, state["opt"], params)
+        new_state.update(params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        metrics = {"loss": loss, "ce": ce, "aux": aux, "grad_norm": gnorm}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,69 @@
+"""Serving steps: prefill_step (compute-side, writes the paged store
+layer-wise) and serve_step (one token; attention through the in-storage
+engine). Factories return jit'd callables with explicit shardings, donating
+the cache buffer so decode is allocation-free at steady state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.paged_kv import cache_specs, make_layout
+from repro.models.transformer import forward, init_cache, layer_kinds, n_periods
+from repro.sharding.policy import NullPolicy
+
+
+def cache_shardings(cfg, pol, layout):
+    """NamedSharding pytree matching init_cache output."""
+    if isinstance(pol, NullPolicy):
+        return None
+    from jax.sharding import PartitionSpec as P
+    specs = cache_specs(layout, pol)
+    b = pol.batch_spec
+
+    def prepend(spec):     # add the stacked period dim
+        return P(*((None,) + tuple(spec)))
+
+    entries = []
+    for mixer, _ in layer_kinds(cfg):
+        if mixer == "attn":
+            e = {k: pol.named(prepend(v)) for k, v in specs.items()}
+            if cfg.family == "encdec":
+                e["cross_k"] = pol.named(P(None, b, None, None, None))
+                e["cross_v"] = pol.named(P(None, b, None, None, None))
+        else:
+            e = {"conv": pol.named(P(None, b, None, "model")),
+                 "ssm": pol.named(P(None, b, "model", None))}
+        entries.append(e)
+    return {"layers": tuple(entries), "length": pol.named(P())}
+
+
+def make_prefill_step(cfg, pol, layout, length=None):
+    def prefill_step(params, batch):
+        logits, _, cache = forward(cfg, pol, params, batch, "prefill",
+                                   layout=layout, length=length)
+        return logits[:, -1:], cache
+    return prefill_step
+
+
+def make_serve_step(cfg, pol, layout):
+    def serve_step(params, cache, token):
+        logits, _, cache = forward(cfg, pol, params, {"token": token},
+                                   "decode", cache=cache, layout=layout)
+        return logits, cache
+    return serve_step
+
+
+def jit_serve_step(cfg, pol, layout, donate_cache: bool = True):
+    fn = make_serve_step(cfg, pol, layout)
+    if isinstance(pol, NullPolicy):
+        return jax.jit(fn, donate_argnums=(1,) if donate_cache else ())
+    cshard = cache_shardings(cfg, pol, layout)
+    tok = pol.named(jax.sharding.PartitionSpec(pol.batch_spec, None))
+    return jax.jit(fn,
+                   in_shardings=(None, cshard, tok),
+                   out_shardings=(pol.named(pol.logits()), cshard),
+                   donate_argnums=(1,) if donate_cache else ())

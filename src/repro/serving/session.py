@@ -1,0 +1,91 @@
+"""Offline batched serving sessions (the paper's scenario: offline,
+long-context, large-batch, uniform lengths — input/output 1024/1024 in the
+paper's evaluation). A Session owns params + paged cache and exposes
+prefill/generate; the BatchScheduler packs uniform-length requests into
+full batches for throughput.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paged_kv import make_layout
+from repro.models.transformer import forward
+from repro.serving.decode import jit_serve_step, make_prefill_step
+from repro.sharding.policy import NULL
+
+
+@dataclass
+class Session:
+    cfg: object
+    params: object
+    pol: object = NULL
+    max_seq: int = 0
+    cache: object = None
+    layout: object = None
+    _serve = None
+
+    def __post_init__(self):
+        self.max_seq = self.max_seq or self.cfg.max_seq
+        n_workers = 1 if self.pol is NULL else dict(
+            zip(self.pol.mesh.axis_names,
+                self.pol.mesh.devices.shape)).get("model", 1)
+        self.layout = make_layout(self.cfg, self.max_seq, n_workers)
+        self._serve = jit_serve_step(self.cfg, self.pol, self.layout,
+                                     donate_cache=True)
+
+    def prefill(self, batch: dict) -> jax.Array:
+        length = batch["tokens"].shape[1]
+        step = make_prefill_step(self.cfg, self.pol, self.layout,
+                                 length=length)
+        if self.pol is NULL:
+            logits, self.cache = jax.jit(step)(self.params, batch)
+        else:
+            from repro.serving.decode import cache_shardings
+            cshard = cache_shardings(self.cfg, self.pol, self.layout)
+            logits, self.cache = jax.jit(
+                step, out_shardings=(None, cshard))(self.params, batch)
+        return logits
+
+    def decode_step(self, token) -> jax.Array:
+        logits, self.cache = self._serve(self.params, self.cache, token)
+        return logits
+
+    def generate(self, batch: dict, n_tokens: int, greedy: bool = True,
+                 key=None) -> np.ndarray:
+        logits = self.prefill(batch)
+        b = batch["tokens"].shape[0]
+        out = []
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        for i in range(n_tokens):
+            out.append(np.asarray(tok)[:, 0])
+            logits = self.decode_step(tok)
+            if greedy or key is None:
+                tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            else:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, logits[:, -1]).astype(jnp.int32)[:, None]
+        return np.stack(out, axis=1)
+
+
+@dataclass
+class BatchScheduler:
+    """Packs uniform-length offline requests into full batches (throughput-
+    oriented continuous batching at page granularity)."""
+    batch_size: int
+    queue: List[np.ndarray] = field(default_factory=list)
+
+    def submit(self, tokens: np.ndarray):
+        self.queue.append(tokens)
+
+    def next_batch(self) -> Optional[np.ndarray]:
+        if len(self.queue) < self.batch_size:
+            return None
+        take, self.queue = (self.queue[:self.batch_size],
+                            self.queue[self.batch_size:])
+        return np.stack(take)

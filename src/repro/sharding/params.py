@@ -1,0 +1,128 @@
+"""Path-based PartitionSpec assignment for parameter / optimizer-state /
+train-state pytrees. Rules follow sharding/policy.py fallback chains; any
+leaf whose natural axis is not divisible by the model-axis size is
+replicated (correct, just not TP-sharded — recorded in the dry-run report).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.policy import ShardingPolicy
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def _div(n: int, m: int) -> bool:
+    return n > 0 and n % m == 0
+
+
+def param_spec(pol: ShardingPolicy, path: str, shape) -> P:
+    """Spec for one parameter leaf; `path` like 'blocks/0/attn/wq'."""
+    m = pol._model()
+    prepend = ("blocks/" in path or path.startswith("blocks")) or \
+        ("encoder/blocks" in path)
+    base = None
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    if parent in ("attn", "cross"):
+        base = {"wq": pol.wq(), "wk": pol.wkv(), "wv": pol.wkv(),
+                "wo": pol.wo()}[name]
+    elif parent == "mlp":
+        base = {"w_gate": pol.w_ff_in(), "w_up": pol.w_ff_in(),
+                "w_down": pol.w_ff_out()}[name]
+    elif parent == "moe":
+        base = {"router": P(None, None), "w_gate": pol.w_expert_in(),
+                "w_up": pol.w_expert_in(), "w_down": pol.w_expert_out()}[name]
+    elif parent == "mamba":
+        d_inner_ok = _div(shape[-1], m) if name in (
+            "in_proj", "conv_w", "dt_proj") else True
+        mm = "model"
+        specs = {
+            "in_proj": P(None, mm if _div(shape[-1], m) else None),
+            "conv_w": P(None, mm if _div(shape[-1], m) else None),
+            "conv_b": P(mm if _div(shape[-1], m) else None),
+            "x_proj": P(mm if _div(shape[0], m) else None, None),
+            "dt_proj": P(None, mm if _div(shape[-1], m) else None),
+            "dt_bias": P(mm if _div(shape[-1], m) else None),
+            "A_log": P(mm if _div(shape[0], m) else None, None),
+            "D": P(mm if _div(shape[-1], m) else None),
+            "out_proj": P(mm if _div(shape[0], m) else None, None),
+        }
+        base = specs[name]
+    elif parent == "embed" or name in ("tok", "unembed"):
+        if name == "tok":
+            base = P("model" if _div(shape[0], m) else None, None)
+        else:
+            base = P(None, "model" if _div(shape[-1], m) else None)
+    else:
+        base = P(*([None] * len(shape)))       # norms, frontend, misc
+
+    if base is None:
+        base = P(*([None] * len(shape)))
+    spec = tuple(base)
+    if prepend:
+        spec = (None,) + spec                  # stacked period dim
+    # rank-adjust (defensive: some leaves may differ in rank)
+    if len(spec) > len(shape):
+        spec = spec[:len(shape)]
+    while len(spec) < len(shape):
+        spec = spec + (None,)
+    return P(*spec)
+
+
+def opt_spec(pol: ShardingPolicy, path: str, shape) -> P:
+    """Optimizer-state leaf: mirror the underlying param's spec.
+    Adafactor factored leaves drop the corresponding dim."""
+    parts = path.split("/")
+    # state paths look like: m/<param path>, v/<param path>/vr, step ...
+    if parts[-1] in ("vr", "vc"):
+        ppath = "/".join(parts[1:-1])
+        # infer the param spec at full rank, then drop a dim
+        pspec = tuple(param_spec(pol, ppath, shape + (1,))
+                      if parts[-1] == "vr" else
+                      param_spec(pol, ppath,
+                                 shape[:-1] + (1,) + shape[-1:]))
+        if parts[-1] == "vr":
+            return P(*pspec[:-1])
+        return P(*(pspec[:-2] + pspec[-1:]))
+    if parts[0] in ("m", "v"):
+        return param_spec(pol, "/".join(parts[1:]), shape)
+    return P(*([None] * len(shape)))
+
+
+def tree_shardings(pol: ShardingPolicy, tree: Any, spec_fn) -> Any:
+    """Pytree of NamedSharding for `tree` (arrays or ShapeDtypeStructs)."""
+    def assign(path, leaf):
+        spec = spec_fn(pol, _path_str(path), leaf.shape)
+        return pol.named(spec)
+    return jax.tree_util.tree_map_with_path(assign, tree)
+
+
+def params_shardings(pol: ShardingPolicy, params: Any) -> Any:
+    return tree_shardings(pol, params, param_spec)
+
+
+def state_shardings(pol: ShardingPolicy, state: Any) -> Any:
+    def assign(path, leaf):
+        p = _path_str(path)
+        if p.startswith("params/"):
+            spec = param_spec(pol, p[len("params/"):], leaf.shape)
+        elif p.startswith("opt/"):
+            spec = opt_spec(pol, p[len("opt/"):], leaf.shape)
+        elif p.startswith("err/"):
+            spec = param_spec(pol, p[len("err/"):], leaf.shape)
+        else:
+            spec = P(*([None] * len(leaf.shape)))
+        return pol.named(spec)
+    return jax.tree_util.tree_map_with_path(assign, state)

@@ -1,0 +1,240 @@
+"""Sharding policy: PartitionSpec derivation with divisibility fallbacks.
+
+Mesh axes:
+  single-pod: ("data", "model")            shape (16, 16)
+  multi-pod : ("pod", "data", "model")     shape (2, 16, 16)
+
+Fallback chains (see DESIGN.md):
+  attention weights : n_heads -> head_dim -> replicate
+  KV cache          : n_kv_heads -> seq pages -> replicate
+  FFN               : d_ff ; MoE: experts (EP) ; embeddings: padded vocab
+  batch             : ("pod","data") when divisible else replicate
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_size(mesh: Mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh_axis_size(mesh, a)
+    return n
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """Resolves every tensor role in the system to a PartitionSpec."""
+    mesh: Mesh
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    n_experts: int
+    global_batch: int
+    seq_len: int
+    page_tokens: int = 16
+    expert_bytes: int = 0            # total expert-param bytes (all layers)
+    ep_hbm_budget: int = 8 << 30     # per-device budget before grid EP
+    ep_mode_override: str = "auto"   # pin the mode (probes must keep the
+                                     # production layout)
+
+    # ---- helpers ----
+    def _model(self) -> int:
+        return mesh_axis_size(self.mesh, "model")
+
+    def _div(self, n: int) -> bool:
+        return n > 0 and n % self._model() == 0
+
+    @property
+    def batch_spec(self):
+        axes = data_axes(self.mesh)
+        if self.global_batch % data_size(self.mesh) == 0:
+            return axes if len(axes) > 1 else axes[0]
+        return None
+
+    # how attention compute is split across "model"
+    @property
+    def attn_shard_mode(self) -> str:
+        if self._div(self.n_heads):
+            return "heads"
+        if self._div(self.head_dim):
+            return "head_dim"
+        return "replicate"
+
+    # how the KV *storage tier* is split across "model" (the CSD array)
+    @property
+    def kv_shard_mode(self) -> str:
+        if self._div(self.n_kv_heads):
+            return "kv_heads"
+        if (self.seq_len // self.page_tokens) % self._model() == 0:
+            return "seq"
+        return "replicate"
+
+    # ---- parameter specs ----
+    def wq(self):   # [d, H, hd]
+        m = self.attn_shard_mode
+        return P(None, "model", None) if m == "heads" else (
+            P(None, None, "model") if m == "head_dim" else P(None, None, None))
+
+    def wkv(self):  # [d, KV, hd]
+        m = self.attn_shard_mode
+        if m == "heads" and self._div(self.n_kv_heads):
+            return P(None, "model", None)
+        if m == "head_dim":
+            return P(None, None, "model")
+        return P(None, None, None)
+
+    def wo(self):   # [H, hd, d]
+        m = self.attn_shard_mode
+        return P("model", None, None) if m == "heads" else (
+            P(None, "model", None) if m == "head_dim" else P(None, None, None))
+
+    def w_ff_in(self):   # [d, f]
+        return P(None, "model") if self._div(self.d_ff) else P(None, None)
+
+    def w_ff_out(self):  # [f, d]
+        return P("model", None) if self._div(self.d_ff) else P(None, None)
+
+    def moe_mode(self) -> str:
+        """How expert weights are laid out:
+        'model': EP over the model axis only (small MoEs).
+        'grid' : experts over `data` x d_ff over `model` — needed when
+                 per-device expert bytes under model-only EP exceed HBM
+                 (kimi-k2 1T, jamba 398B). See DESIGN.md.
+        'replicate': no EP possible."""
+        d_axis = mesh_axis_size(self.mesh, "data")
+        m = self._model()
+        model_ok = self._div(self.n_experts)
+        grid_ok = (self.n_experts % d_axis == 0 and self._div(self.d_ff))
+        if self.ep_mode_override == "model" and model_ok:
+            return "model"
+        if self.ep_mode_override == "grid" and grid_ok:
+            return "grid"
+        if model_ok and self.expert_bytes // m <= self.ep_hbm_budget:
+            return "model"
+        if grid_ok:
+            return "grid"
+        if model_ok:
+            return "model"
+        return "replicate"
+
+    def w_expert_in(self):   # [E, d, f]
+        mode = self.moe_mode()
+        if mode == "grid":
+            return P("data", None, "model")
+        if mode == "model":
+            return P("model", None, None)
+        return P(None, None, "model") if self._div(self.d_ff) else P(None, None, None)
+
+    def w_expert_out(self):  # [E, f, d]
+        mode = self.moe_mode()
+        if mode == "grid":
+            return P("data", "model", None)
+        if mode == "model":
+            return P("model", None, None)
+        return P(None, "model", None) if self._div(self.d_ff) else P(None, None, None)
+
+    def embed(self):     # [V, d]
+        return P("model", None)
+
+    def mamba_inner(self):   # tensors with a d_inner dim at axis -1
+        return P(None, "model")
+
+    def norm(self):
+        return P(None)
+
+    # ---- activation specs ----
+    def acts(self, *, heads: bool = False):   # [B, S, d] or [B, S, H, hd]
+        b = self.batch_spec
+        if heads:
+            m = self.attn_shard_mode
+            hspec = "model" if m == "heads" else None
+            dspec = "model" if m == "head_dim" else None
+            return P(b, None, hspec, dspec)
+        return P(b, None, None)
+
+    def tokens(self):    # [B, S] int32
+        return P(self.batch_spec, None)
+
+    # KV cache storage layout [B, KV, n_pages, page, hd] (token-indexed)
+    def kv_pages(self):
+        b = self.batch_spec
+        m = self.kv_shard_mode
+        if m == "kv_heads":
+            return P(b, "model", None, None, None)
+        if m == "seq":
+            return P(b, None, "model", None, None)
+        return P(b, None, None, None, None)
+
+    # embedding-indexed K copy [B, KV, hd, S]
+    def k_embed(self):
+        b = self.batch_spec
+        m = self.kv_shard_mode
+        if m == "kv_heads":
+            return P(b, "model", None, None)
+        if m == "seq":
+            return P(b, None, None, "model")
+        return P(b, None, None, None)
+
+    # mamba decode state [B, d_inner, N] — shard-resident, never moves
+    def ssm_state(self):
+        return P(self.batch_spec, "model", None)
+
+    def conv_state(self):    # [B, conv, d_inner]
+        return P(self.batch_spec, None, "model")
+
+    def logits(self):        # [B, S, V]
+        return P(self.batch_spec, None, "model")
+
+    def named(self, spec) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def c(self, x, spec):
+        """Apply a sharding constraint (no-op for None spec)."""
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.named(spec))
+
+
+class NullPolicy:
+    """Policy used off-mesh (smoke tests, single device): all no-ops."""
+    def __getattr__(self, name):
+        if name in ("batch_spec",):
+            return None
+        if name in ("attn_shard_mode",):
+            return "replicate"
+        if name in ("kv_shard_mode",):
+            return "replicate"
+        return lambda *a, **k: None
+
+    def c(self, x, spec):  # noqa: D401
+        return x
+
+
+NULL = NullPolicy()
+
+
+def policy_for(cfg, mesh: Optional[Mesh], shape) -> "ShardingPolicy | NullPolicy":
+    if mesh is None:
+        return NULL
+    n_moe = sum(1 for i in range(cfg.n_layers) if cfg.is_moe_layer(i))
+    expert_bytes = n_moe * cfg.n_experts * 3 * cfg.d_model * cfg.d_ff * 2
+    return ShardingPolicy(
+        mesh=mesh, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim or 0, d_ff=cfg.d_ff, n_experts=cfg.n_experts,
+        global_batch=shape.global_batch, seq_len=shape.seq_len,
+        page_tokens=cfg.sparf.page_tokens, expert_bytes=expert_bytes,
+        ep_mode_override=getattr(cfg, "ep_mode", "auto"))

@@ -1,0 +1,120 @@
+"""HLO text analysis: collective-bytes accounting for the roofline.
+
+cost_analysis() does not report collective traffic, so we parse the
+post-SPMD optimized HLO (compiled.as_text()) and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Optimized HLO prints operands untyped (`%name`), so operand bytes are
+derived from the RESULT shape and the replica-group size:
+  all-reduce / all-to-all / collective-permute : operand == result
+  all-gather    : operand = result / participants
+  reduce-scatter: operand = result * participants
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_RESULT_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_ILOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _participants(line: str) -> int:
+    m = _GROUPS_ILOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _parse_line(line: str):
+    m = _RESULT_RE.search(line)
+    if m is None:
+        return None
+    tuple_body, dtype, dims, op, start = m.groups()
+    if tuple_body is not None:
+        total = sum(shape_bytes(d, dm)
+                    for d, dm in _SHAPE_RE.findall(tuple_body))
+    else:
+        total = shape_bytes(dtype, dims)
+    return op, total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind (+ 'total')."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        parsed = _parse_line(line)
+        if parsed is None:
+            continue
+        op, result_bytes = parsed
+        p = _participants(line)
+        if op == "all-gather":
+            operand = result_bytes // max(p, 1)
+        elif op == "reduce-scatter":
+            operand = result_bytes * p
+        else:
+            operand = result_bytes
+        out[op] += operand
+        out[op + "_wire"] = out.get(op + "_wire", 0) + (
+            operand * (p - 1) if op in ("all-gather", "all-reduce")
+            else operand)
+    out["total"] = sum(v for k, v in out.items()
+                       if k in ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+    return dict(out)
+
+
+_CONVERT_RE = re.compile(
+    r"=\s*f32\[([0-9,]*)\](?:\{[^}]*\})?\s*convert\(")
+
+
+def convert_bytes(hlo_text: str) -> int:
+    """f32 result bytes of convert ops. The CPU backend converts bf16 dot
+    operands to f32 (no native bf16 matmul), inflating 'bytes accessed' by
+    ~3x for weight-streaming ops; TPU executes these natively. Roofline
+    reports a TPU-adjusted memory term = bytes - 2 * convert_bytes
+    (the f32 write + f32 re-read that do not exist on TPU)."""
+    total = 0
+    for line in hlo_text.splitlines():
+        m = _CONVERT_RE.search(line)
+        if m:
+            n = 1
+            for d in m.group(1).split(","):
+                if d:
+                    n *= int(d)
+            total += n * 4
+    return total
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        parsed = _parse_line(line)
+        if parsed:
+            out[parsed[0]] += 1
+    return dict(out)

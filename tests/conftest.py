@@ -1,0 +1,22 @@
+import os
+import sys
+
+# Tests see ONE device (dry-run sets its own flags in a separate process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def assert_tree_finite(tree):
+    import jax.numpy as jnp
+    for leaf in jax.tree.leaves(tree):
+        assert not bool(jnp.isnan(jnp.asarray(leaf, jnp.float32)).any())

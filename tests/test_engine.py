@@ -1,0 +1,43 @@
+"""Operator-placement planner (paper §III-B / Fig. 6) — the split must be
+*derived*, and must flip when the hardware premise flips."""
+import dataclasses
+
+import pytest
+
+from repro.core.engine import (CSD_ZYNQ, GPU_A6000, opt13b_operators,
+                               paper_plan, plan)
+
+
+def test_paper_split_is_recovered():
+    got = {(r["op"], r["phase"]): r["placement"] for r in paper_plan(64)}
+    assert got == {("QKV/O-Proj+FFN", "prefill"): "compute",
+                   ("Attention", "prefill"): "compute",
+                   ("QKV/O-Proj+FFN", "decode"): "compute",
+                   ("Logit+Attend", "decode"): "storage"}
+
+
+def test_decode_attention_moves_back_when_egress_is_fast():
+    """If the storage medium could egress at full link speed (i.e. the
+    PCIe bottleneck the paper targets did not exist), offloading decode
+    attention to a 100x weaker engine would no longer win."""
+    fast_storage = dataclasses.replace(CSD_ZYNQ, bulk_bw=64e9, link_bw=64e9)
+    rows = plan(opt13b_operators(64), GPU_A6000, fast_storage)
+    got = {(r["op"], r["phase"]): r["placement"] for r in rows}
+    assert got[("Logit+Attend", "decode")] == "compute"
+
+
+def test_prefill_never_offloaded_even_with_slow_egress():
+    """Prefill attention is compute-intense; the CSD's weak FLOPs keep it
+    on the GPU regardless (paper: 'prefill-phase attention should also
+    remain on the GPU')."""
+    rows = plan(opt13b_operators(256), GPU_A6000, CSD_ZYNQ)
+    got = {(r["op"], r["phase"]): r["placement"] for r in rows}
+    assert got[("Attention", "prefill")] == "compute"
+
+
+@pytest.mark.parametrize("batch", [4, 32, 256])
+def test_decode_attention_intensity_is_constant(batch):
+    """Decode attention AI == 1 independent of batch (the paper's core
+    observation: GeMV cannot be batched into compute-bound territory)."""
+    ops = {(o.name, o.phase): o for o in opt13b_operators(batch)}
+    assert ops[("Logit+Attend", "decode")].intensity == pytest.approx(1.0)

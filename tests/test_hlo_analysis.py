@@ -1,0 +1,41 @@
+"""Unit tests for the HLO collective-bytes parser (roofline input)."""
+from repro.utils.hlo import collective_bytes, collective_counts, shape_bytes
+
+
+HLO = """
+  %ag = f32[32,64]{1,0} all-gather(%x), channel_id=1, replica_groups=[4,2]<=[2,4]T(1,0), dimensions={0}
+  %ar = bf16[128]{0} all-reduce(%y), replica_groups=[2,4]<=[8], to_apply=%add
+  %rs = f32[16,8]{1,0} reduce-scatter(%z), replica_groups=[2,4]<=[8], dimensions={0}
+  %a2a = f32[8,8]{1,0} all-to-all(%w), replica_groups=[1,8]<=[8], dimensions={0}
+  %cp = s32[4]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %ags = (f32[4,4]{1,0}, u32[]) all-gather-start(%q), replica_groups=[2,2]<=[4], dimensions={1}
+  %agd = f32[4,4]{1,0} all-gather-done(%ags)
+  %noise = f32[99]{0} add(%a, %b)
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32", "32,64") == 32 * 64 * 4
+    assert shape_bytes("bf16", "128") == 256
+    assert shape_bytes("pred", "") == 1
+
+
+def test_collective_bytes_per_kind():
+    out = collective_bytes(HLO)
+    # all-gather: result 8192 B / 2 participants -> 4096 operand;
+    # -start tuple (f32[4,4] + u32[]) = 68 B / 2 participants -> 34
+    assert out["all-gather"] == 8192 // 2 + 68 // 2
+    assert out["all-reduce"] == 128 * 2
+    # reduce-scatter: operand = result * participants
+    assert out["reduce-scatter"] == 16 * 8 * 4 * 4
+    assert out["all-to-all"] == 8 * 8 * 4
+    assert out["collective-permute"] == 16
+    assert out["total"] == sum(
+        out[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+
+
+def test_counts_skip_done_ops():
+    c = collective_counts(HLO)
+    assert c["all-gather"] == 2        # plain + -start, not -done
+    assert c["all-reduce"] == 1

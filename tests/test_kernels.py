@@ -1,0 +1,118 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose against the
+ref.py pure-jnp oracles (kernels run in interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: dict(atol=1e-5, rtol=1e-5),
+       jnp.bfloat16: dict(atol=2e-2, rtol=2e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Sq,Sk,hd,bq,bk", [
+    (1, 2, 128, 128, 64, 64, 64),
+    (2, 1, 256, 256, 32, 128, 128),
+    (1, 4, 64, 256, 128, 64, 64),     # cross-length (kv longer)
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(B, H, Sq, Sk, hd, bq, bk, dtype, causal):
+    q = _rand(0, (B, H, Sq, hd), dtype)
+    k = _rand(1, (B, H, Sk, hd), dtype)
+    v = _rand(2, (B, H, Sk, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk)
+    r = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.float32(out), np.float32(r),
+                               **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,KV,G,P,page,hd,length", [
+    (1, 2, 2, 8, 8, 64, 50),
+    (2, 1, 4, 16, 4, 32, 64),
+    (1, 4, 1, 4, 16, 128, 17),
+])
+def test_paged_attention(B, KV, G, P, page, hd, length, dtype):
+    kp = _rand(3, (B, KV, P, page, hd), dtype)
+    vp = _rand(4, (B, KV, P, page, hd), dtype)
+    q = _rand(5, (B, KV, G, hd), dtype)
+    perm = jax.random.permutation(jax.random.PRNGKey(6), P)
+    bt = jnp.broadcast_to(perm, (B, KV, P)).astype(jnp.int32)
+    out = ops.paged_attention(q, kp, vp, bt, length)
+    r = ref.paged_attention(q, kp, vp, bt, length)
+    np.testing.assert_allclose(np.float32(out), np.float32(r),
+                               **TOL[dtype])
+
+
+def test_paged_attention_block_table_permutation_invariance():
+    """FTL property: physically permuting pages + updating the table leaves
+    the result unchanged."""
+    B, KV, G, P, page, hd, length = 1, 2, 2, 8, 8, 64, 60
+    kp = _rand(7, (B, KV, P, page, hd), jnp.float32)
+    vp = _rand(8, (B, KV, P, page, hd), jnp.float32)
+    q = _rand(9, (B, KV, G, hd), jnp.float32)
+    bt_id = jnp.broadcast_to(jnp.arange(P), (B, KV, P)).astype(jnp.int32)
+    base = ops.paged_attention(q, kp, vp, bt_id, length)
+    perm = jax.random.permutation(jax.random.PRNGKey(10), P)
+    # move logical page i to physical slot perm[i]; table points at perm
+    bt2 = jnp.broadcast_to(perm, (B, KV, P)).astype(jnp.int32)
+    kp3 = jnp.zeros_like(kp).at[:, :, perm].set(kp)
+    vp3 = jnp.zeros_like(vp).at[:, :, perm].set(vp)
+    moved = ops.paged_attention(q, kp3, vp3, bt2, length)
+    np.testing.assert_allclose(np.asarray(moved), np.asarray(base),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,KV,G,page,r,k", [
+    (64, 2, 2, 8, 16, 16),
+    (128, 1, 4, 16, 8, 32),
+    (64, 4, 1, 4, 32, 64),     # k = S: exact
+])
+def test_sparf_kernels_match_core(S, KV, G, page, r, k, dtype):
+    from repro.configs.base import SparFConfig
+    from repro.core.paged_kv import KVLayout
+    from repro.core.sparf import combine_sparf, sparf_worker
+    B, hd = 2, 64
+    P = S // page
+    kp = _rand(11, (B, KV, P, page, hd), dtype)
+    vp = _rand(12, (B, KV, P, page, hd), dtype)
+    q = _rand(13, (B, KV, G, hd), dtype)
+    length = S - 5
+    ke = kp.reshape(B, KV, S, hd).swapaxes(-1, -2)
+    v_sum = jnp.sum(jnp.float32(vp.reshape(B, KV, S, hd))[:, :, :length], 2)
+    bt = jnp.broadcast_to(jnp.arange(P), (B, KV, P)).astype(jnp.int32)
+    out = ops.sparf_attention(q, kp, vp, ke, bt, v_sum, length,
+                              rank_r=r, top_k=k)
+    layout = KVLayout(n_kv_heads=KV, head_dim=hd, page=page, n_pages=P,
+                      n_workers=1, kv_shards=1, seq_shards=1)
+    part = sparf_worker(layout, SparFConfig(rank_r=r, top_k=k,
+                                            page_tokens=page),
+                        q, kp, vp, ke, bt, 0, length)
+    rr = combine_sparf(part, v_sum / length)
+    np.testing.assert_allclose(np.float32(out), np.float32(rr),
+                               atol=5e-3 if dtype == jnp.bfloat16 else 1e-5,
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("B,T,D,N,chunk", [
+    (1, 64, 8, 8, 16), (2, 128, 16, 16, 64), (1, 32, 4, 4, 32),
+])
+def test_mamba_scan(B, T, D, N, chunk, dtype):
+    ab = jax.random.uniform(jax.random.PRNGKey(14), (B, T, D, N),
+                            minval=0.5, maxval=0.999).astype(dtype)
+    bx = (_rand(15, (B, T, D, N), dtype) * 0.1).astype(dtype)
+    ct = _rand(16, (B, T, N), dtype)
+    out = ops.mamba_scan(ab, bx, ct, chunk=chunk)
+    r, _ = ref.mamba_scan(ab, bx, ct)
+    np.testing.assert_allclose(np.float32(out), np.float32(r),
+                               atol=1e-5, rtol=1e-4)

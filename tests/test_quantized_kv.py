@@ -1,0 +1,43 @@
+"""fp8 KV storage (beyond-paper, §Perf iteration 6): correctness bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.core.paged_kv import make_layout
+from repro.models.model_zoo import build, forward, init_params, make_inputs
+from repro.sharding.policy import NULL
+
+
+@pytest.mark.parametrize("impl", ["insti_dense", "insti_sparf"])
+def test_fp8_kv_close_to_bf16(impl):
+    cfg0 = build("glm4-9b", smoke=True).replace(
+        max_seq=64, dtype="float32", attention_impl=impl)
+    params = init_params(cfg0, jax.random.PRNGKey(0))
+    batch = make_inputs(cfg0, ShapeConfig("t", 24, 2, "prefill"),
+                        jax.random.PRNGKey(0))
+    probs = {}
+    for kvd in ("", "float8_e4m3fn"):
+        cfg = cfg0.replace(kv_dtype=kvd)
+        layout = make_layout(cfg, cfg.max_seq, 1)
+        _, _, cache = forward(cfg, NULL, params, batch, "prefill",
+                              layout=layout, length=24)
+        d, _, _ = forward(cfg, NULL, params,
+                          {"token": batch["tokens"][:, :1]}, "decode",
+                          cache=cache, layout=layout)
+        probs[kvd] = np.float32(jax.nn.softmax(d[:, 0], -1))
+    err = np.abs(probs[""] - probs["float8_e4m3fn"]).max()
+    assert err < 0.05, err
+
+
+def test_fp8_kv_cache_is_half_size():
+    cfg = build("glm4-9b", smoke=True).replace(max_seq=64)
+    from repro.models.transformer import init_cache
+    c16 = init_cache(cfg, 2, 64, 1)
+    c8 = init_cache(cfg.replace(kv_dtype="float8_e4m3fn"), 2, 64, 1)
+    b16 = sum(x.size * x.dtype.itemsize
+              for x in jax.tree.leaves(c16["layers"]))
+    b8 = sum(x.size * x.dtype.itemsize
+             for x in jax.tree.leaves(c8["layers"]))
+    assert b8 < 0.6 * b16

@@ -1,0 +1,144 @@
+"""SparF algorithm properties (paper Alg.1) + hypothesis property tests on
+the paged-KV invariants."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.base import ModelConfig, SparFConfig
+from repro.core import baselines
+from repro.core.offload import decode_attention
+from repro.core.paged_kv import (init_layer_cache, make_layout,
+                                 write_prefill)
+from repro.sharding.policy import NULL
+
+
+def _mk(B=2, S=64, KV=4, H=8, hd=16, r=8, k=32, page=4, seed=0):
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=H * hd,
+                      n_heads=H, n_kv_heads=KV, d_ff=16, vocab_size=64,
+                      sparf=SparFConfig(rank_r=r, top_k=k, page_tokens=page))
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    k_ = jax.random.normal(ks[0], (B, S, KV, hd))
+    v_ = jax.random.normal(ks[1], (B, S, KV, hd))
+    q_ = jax.random.normal(ks[2], (B, H, hd))
+    return cfg, q_, k_, v_
+
+
+def _cache(cfg, k, v, length, n_workers=1):
+    S = k.shape[1]
+    layout = make_layout(cfg, S, n_workers)
+    c = write_prefill(layout, init_layer_cache(layout, k.shape[0],
+                                               jnp.float32), k, v,
+                      lengths=length)
+    return layout, c
+
+
+def test_sparf_full_k_equals_dense():
+    """With top_k = S and r = hd, SparF must equal dense attention."""
+    cfg, q, k, v = _mk(r=16, k=64)
+    length = 50
+    layout, cache = _cache(cfg, k, v, length)
+    dense = decode_attention(cfg, NULL, layout, q, cache, length,
+                             impl="insti_dense")
+    sparf = decode_attention(cfg, NULL, layout, q, cache, length,
+                             impl="insti_sparf")
+    np.testing.assert_allclose(np.asarray(sparf), np.asarray(dense),
+                               atol=1e-5)
+
+
+def test_sparf_error_decreases_with_k():
+    cfg, q, k, v = _mk()
+    length = 60
+    errs = []
+    for kk in (8, 16, 32, 64):
+        c = cfg.replace(sparf=SparFConfig(rank_r=8, top_k=kk, page_tokens=4))
+        layout, cache = _cache(c, k, v, length)
+        dense = decode_attention(c, NULL, layout, q, cache, length,
+                                 impl="insti_dense")
+        sparf = decode_attention(c, NULL, layout, q, cache, length,
+                                 impl="insti_sparf")
+        errs.append(float(jnp.mean(jnp.abs(sparf - dense))))
+    assert errs[-1] <= errs[0]
+    assert errs[-1] < 1e-5          # k = S exact
+
+
+def test_sparf_beats_local_window():
+    """Fig. 11 qualitative claim: SparF error << local-window error at the
+    same budget (averaged over heads/batch)."""
+    cfg, q, k, v = _mk(S=128, k=32, seed=3)
+    length = 120
+    layout, cache = _cache(cfg, k, v, length)
+    dense = decode_attention(cfg, NULL, layout, q, cache, length,
+                             impl="insti_dense")
+    sparf = decode_attention(cfg, NULL, layout, q, cache, length,
+                             impl="insti_sparf")
+    loc = baselines.local_decode(q, k, v, length, keep=32)
+    err_sparf = float(jnp.mean(jnp.abs(sparf - dense)))
+    err_local = float(jnp.mean(jnp.abs(loc - dense)))
+    assert err_sparf < err_local
+
+
+def test_sparf_matches_vanilla_sparq():
+    """SparF == SparQ in math (page structure only changes the access
+    pattern)."""
+    cfg, q, k, v = _mk(S=64, k=16, r=8)
+    length = 64
+    layout, cache = _cache(cfg, k, v, length)
+    sparf = decode_attention(cfg, NULL, layout, q, cache, length,
+                             impl="insti_sparf")
+    v_mean = jnp.mean(v, axis=1)
+    sparq = baselines.sparq_decode(q, k, v, length, r=8, keep=16,
+                                   v_mean=v_mean)
+    np.testing.assert_allclose(np.asarray(sparf), np.asarray(sparq),
+                               atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    S=st.sampled_from([32, 64, 128]),
+    KV=st.sampled_from([1, 2, 4]),
+    G=st.sampled_from([1, 2]),
+    page=st.sampled_from([4, 8, 16]),
+    frac=st.floats(0.2, 1.0),
+    seed=st.integers(0, 5),
+)
+def test_sparf_alpha_and_shape_properties(S, KV, G, page, frac, seed):
+    """Property: SparF output is finite, correctly shaped, and is a convex
+    combination (alpha in [0,1]) of exact attention and mean-V — so its
+    norm is bounded by max(|attn|, |v_mean|) * (1 + eps)."""
+    H = KV * G
+    hd = 16
+    cfg, q, k, v = _mk(B=1, S=S, KV=KV, H=H, hd=hd,
+                       r=8, k=max(4, int(S * 0.25)), page=page, seed=seed)
+    length = max(2, int(S * frac))
+    layout, cache = _cache(cfg, k, v, length)
+    out = decode_attention(cfg, NULL, layout, q, cache, length,
+                           impl="insti_sparf")
+    assert out.shape == q.shape
+    assert bool(jnp.isfinite(out).all())
+    vmax = float(jnp.max(jnp.abs(v[:, :length])))
+    assert float(jnp.max(jnp.abs(out))) <= vmax + 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    S=st.sampled_from([32, 64]),
+    KV=st.sampled_from([2, 4]),
+    page=st.sampled_from([4, 8]),
+    seed=st.integers(0, 3),
+)
+def test_dense_paged_equals_flat_oracle(S, KV, page, seed):
+    """Property: the paged store + dense decode == flat attention oracle for
+    any (S, KV, page) combination and any live length."""
+    G = 2
+    H = KV * G
+    cfg, q, k, v = _mk(B=2, S=S, KV=KV, H=H, hd=16, page=page, seed=seed)
+    length = S - 3
+    layout, cache = _cache(cfg, k, v, length)
+    out = decode_attention(cfg, NULL, layout, q, cache, length,
+                           impl="insti_dense")
+    oracle = baselines.dense_decode(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               atol=1e-5)
